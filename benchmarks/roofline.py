@@ -1,0 +1,159 @@
+"""Roofline assembly from dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+TPU v5e constants: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI
+(4 links/chip on the 2D torus; the collective term charges the serialized
+per-link volume, i.e. per-device collective bytes / link_bw).
+
+All parsed HLO quantities are per-device (post-SPMD shapes), so:
+    compute    = flops_dev / PEAK_FLOPS      (== flops_global / (chips*peak))
+    memory     = dot_bytes_dev / HBM_BW
+    collective = coll_bytes_dev / LINK_BW
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (decode), giving
+the useful-compute ratio (catches remat/redundant compute).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, get_config, skipped_cells
+from repro.configs.base import SHAPES
+from repro.models import mamba2 as M
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "artifacts")
+
+
+def param_count(cfg) -> Dict[str, float]:
+    """Analytic parameter counts (total and active-per-token)."""
+    hd = cfg.hd
+    emb = cfg.padded_vocab * cfg.d_model
+    attn = cfg.d_model * (cfg.heads * hd) * 2 + \
+        cfg.d_model * (cfg.kv_heads * hd) * 2
+    mlp = 3 * cfg.d_model * cfg.d_ff
+    total = active = emb
+    if cfg.family in ("dense", "vlm"):
+        total += cfg.layers * (attn + mlp)
+        active = total
+    elif cfg.family == "moe":
+        exp = 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff)
+        per_layer = attn + cfg.num_experts * exp + \
+            cfg.d_model * cfg.num_experts
+        act_layer = attn + cfg.top_k * exp + cfg.d_model * cfg.num_experts
+        if cfg.dense_residual:
+            per_layer += mlp
+            act_layer += mlp
+        total += cfg.layers * per_layer
+        active = emb + cfg.layers * act_layer
+    elif cfg.family in ("ssm", "hybrid"):
+        d_in, heads, dh, ds = M._dims(cfg)
+        cd = M.conv_dim(cfg)
+        mam = cfg.d_model * (cd + d_in + heads) + cfg.conv_kernel * cd + \
+            d_in * cfg.d_model
+        total += cfg.layers * mam
+        if cfg.family == "hybrid":
+            total += attn + mlp   # shared block counted once
+        active = total
+        if cfg.family == "hybrid":
+            napps = cfg.layers // max(cfg.attn_period, 1)
+            active = emb + cfg.layers * mam + napps * (attn + mlp)
+    elif cfg.family == "encdec":
+        total += cfg.enc_layers * (attn + mlp) + \
+            cfg.layers * (2 * attn + mlp)
+        active = total
+    return dict(total=total, active=active)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Ideal model FLOPs for the cell (global, matmul-only convention)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    pc = param_count(cfg)
+    n_active = pc["active"]
+    # encdec cells split the seq budget: S/2 source frames through the
+    # encoder + S/2 target tokens through the decoder; each token passes
+    # roughly half the total params
+    tok_scale = 0.5 if cfg.family == "encdec" else 1.0
+    if cell.kind == "train":
+        tokens = cell.seq_len * cell.global_batch * tok_scale
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.seq_len * cell.global_batch * tok_scale
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence; attention cost over the cache adds
+    # 2 * 2 * layers * heads*hd * S per token for attention families
+    tokens = cell.global_batch
+    extra = 0.0
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        extra = 4.0 * cfg.layers * cfg.heads * cfg.hd * cell.seq_len * tokens
+    if cfg.family == "hybrid":
+        napps = cfg.layers // max(cfg.attn_period, 1)
+        extra = 4.0 * napps * cfg.heads * cfg.hd * cell.seq_len * tokens
+    return 2.0 * n_active * tokens + extra
+
+
+def load_cells(mesh: str = "pod16x16") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(
+            ARTIFACTS, f"dryrun_{mesh}_*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_row(rec: Dict) -> Dict:
+    chips = rec["chips"]
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["dot_bytes"] / HBM_BW
+    coll = sum(rec["collective_bytes"].values())
+    t_coll = coll / LINK_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec["flops"] * chips
+    useful = mf / hlo_global if hlo_global else 0.0
+    t_bound = max(terms.values())
+    # roofline fraction: useful model FLOPs over the time the dominant term
+    # implies, vs the chip's peak
+    frac = (mf / chips / max(t_bound, 1e-18)) / PEAK_FLOPS
+    return dict(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                chips=chips, t_compute=t_compute, t_memory=t_memory,
+                t_collective=t_coll, bottleneck=bottleneck,
+                model_flops=mf, hlo_flops_global=hlo_global,
+                useful_ratio=useful, roofline_fraction=frac,
+                peak_gib=rec["memory"]["peak_bytes"] / 2 ** 30,
+                fits_hbm=rec["memory"]["peak_bytes"] <= 16 * 2 ** 30)
+
+
+def table(mesh: str = "pod16x16") -> List[Dict]:
+    return [roofline_row(r) for r in load_cells(mesh)]
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'chips':>5s} "
+           f"{'t_comp(ms)':>10s} {'t_mem(ms)':>10s} {'t_coll(ms)':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'roofl%':>7s} {'peakGiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['chips']:5d} "
+            f"{r['t_compute']*1e3:10.3f} {r['t_memory']*1e3:10.3f} "
+            f"{r['t_collective']*1e3:10.3f} {r['bottleneck']:>10s} "
+            f"{r['useful_ratio']:7.2f} {100*r['roofline_fraction']:6.1f}% "
+            f"{r['peak_gib']:8.2f}{'' if r['fits_hbm'] else ' OOM!'}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = table(mesh)
+        if rows:
+            print(f"\n=== roofline {mesh} ===")
+            print(render(rows))

@@ -1,0 +1,246 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  bench_broadcast_tables   Tables B1-B8: BBS vs baselines per topology x
+                           message size (mean over roots)
+  bench_time_profile       Thm 2 / Fig 3: affinity of T(m), fitted (a, b)
+  bench_rate_timeline      Fig 2: aggregated receive-rate curves
+  bench_lp_build           plan/LP build cost (the "build once offline" cost)
+  bench_eq4_prediction     Eq 3/4: predicted vs simulated optimum
+  bench_roofline           assigned-arch roofline terms from dry-run artifacts
+
+Output format: ``name,us_per_call,derived`` CSV on stdout.
+Full paper grid: ``--sizes 128,256,512,1024 --messages all`` (the default
+trims to the fast subset so `python -m benchmarks.run` completes on CPU in
+minutes; results are cached under benchmarks/artifacts/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+import sys
+import time
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+ALGOS = ("bbs", "binomial", "pipeline", "srda", "glf", "bine", "mpi_bcast")
+
+
+_PLANS = {}
+
+
+def _plan_cached(topo_name: str, n: int, root: int = 0):
+    from repro.core import topology as T
+    from repro.core.bbs import build_plan
+    if (topo_name, n, root) in _PLANS:
+        return _PLANS[(topo_name, n, root)]
+    os.makedirs(os.path.join(ART, "plans"), exist_ok=True)
+    path = os.path.join(ART, "plans", f"{topo_name}_{n}_r{root}.pkl")
+    if os.path.exists(path):
+        try:
+            with open(path, "rb") as f:
+                out = pickle.load(f)
+            _PLANS[(topo_name, n, root)] = out
+            return out
+        except Exception:
+            os.remove(path)   # stale/partial cache entry
+    topo = T.by_name(topo_name, n)
+    t0 = time.time()
+    plan = build_plan(topo, root=root)
+    build_s = time.time() - t0
+    try:
+        # write-temp-then-rename: a failed dump must never leave a partial
+        # file behind (hierarchical topologies hold unpicklable closures)
+        blob = pickle.dumps((plan, build_s))
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.rename(tmp, path)
+    except (AttributeError, pickle.PicklingError, TypeError):
+        pass
+    _PLANS[(topo_name, n, root)] = (plan, build_s)
+    return plan, build_s
+
+
+def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
+    """Paper Tables B1-B8 (mean over sampled roots instead of all n)."""
+    from repro.core import topology as T
+    from repro.core.baselines import simulate_baseline
+    from repro.core.bbs import broadcast_time
+    from repro.core.intersection import ConflictModel, FULL_DUPLEX
+
+    rows = []
+    for topo_name in ("mesh2d", "butterfly", "dragonfly", "fattree"):
+        for n in sizes:
+            topo = T.by_name(topo_name, n)
+            cm = ConflictModel(topo, FULL_DUPLEX)
+            for M in messages:
+                per_algo = {}
+                for algo in ALGOS:
+                    ts = []
+                    for root in roots:
+                        root = root % n
+                        if algo == "bbs":
+                            plan, _ = _plan_cached(topo_name, n, root)
+                            t, _ = broadcast_time(plan, M)
+                        else:
+                            t = simulate_baseline(topo, cm, algo, root,
+                                                  M).finish_time
+                        ts.append(t)
+                    mean = sum(ts) / len(ts)
+                    per_algo[algo] = mean
+                    rows.append((topo_name, n, M, algo, mean, min(ts),
+                                 max(ts)))
+                best_base = min(v for k, v in per_algo.items() if k != "bbs")
+                derived = (f"speedup_vs_best_baseline="
+                           f"{best_base / per_algo['bbs']:.2f}")
+                print(f"bcast/{topo_name}{n}/{int(M/1e3)}KB/bbs,"
+                      f"{per_algo['bbs']*1e6:.1f},{derived}")
+                for k, v in per_algo.items():
+                    if k != "bbs":
+                        print(f"bcast/{topo_name}{n}/{int(M/1e3)}KB/{k},"
+                              f"{v*1e6:.1f},")
+    with open(os.path.join(ART, "broadcast_tables.json"), "w") as f:
+        json.dump(rows, f)
+    return rows
+
+
+def bench_time_profile(n=128):
+    """Thm 2: T(m) affine in m; prints fitted a, b and max residual."""
+    from repro.core import topology as T
+    from repro.core import arborescence as arb
+    from repro.core.intersection import ConflictModel, FULL_DUPLEX
+    from repro.core.schedule import build_pipeline
+    from repro.core.simulator import simulate_pipeline
+    from repro.core.timeprofile import fit_time_profile
+
+    topo = T.by_name("mesh2d", n)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    group = 1e6
+    ms = [2, 4, 8, 16, 32]
+    times = []
+    for m in ms:
+        t, _, _ = simulate_pipeline(topo, cm, pipe, group * m, m, 0,
+                                    max_sim_groups=m)
+        times.append(t)
+    prof = fit_time_profile(ms, times, tau=1.0)
+    resid = max(abs(prof.a + prof.b * m - t) / t
+                for m, t in zip(ms, times))
+    print(f"time_profile/mesh{n},{prof.b*1e6:.2f},"
+          f"a_us={prof.a*1e6:.2f};max_resid={resid:.4f}")
+    return prof
+
+
+def bench_rate_timeline(n=128, M=16e6):
+    """Fig 2: system-wide receive rate over time; derived: peak and mean
+    rate as a fraction of the LP bound C*(n-1)."""
+    from repro.core import topology as T
+    from repro.core.baselines import simulate_baseline
+    from repro.core.bbs import broadcast_time
+    from repro.core.intersection import ConflictModel, FULL_DUPLEX
+    from repro.core.simulator import simulate_pipeline
+
+    out = {}
+    for topo_name in ("mesh2d", "dragonfly"):
+        topo = T.by_name(topo_name, n)
+        cm = ConflictModel(topo, FULL_DUPLEX)
+        plan, _ = _plan_cached(topo_name, n, 0)
+        cand, m = plan.select(M)[0]
+        m0 = min(m, 24)
+        tot, res, _ = simulate_pipeline(topo, cm, cand.pipeline, M * m0 / m,
+                                        m0, 0, max_sim_groups=m0)
+        tl = res.rate_timeline(bins=50)
+        peak = max(r for _, r in tl)
+        mean = sum(r for _, r in tl) / len(tl)
+        bound = plan.lp.C * (topo.num_nodes - 1)
+        print(f"rate/{topo_name}{n}/bbs,{tot*1e6:.1f},"
+              f"peak_frac={peak/bound:.3f};mean_frac={mean/bound:.3f}")
+        srda = simulate_baseline(topo, cm, "srda", 0, M)
+        tl2 = srda.rate_timeline(bins=50)
+        peak2 = max(r for _, r in tl2)
+        print(f"rate/{topo_name}{n}/srda,{srda.finish_time*1e6:.1f},"
+              f"peak_frac={peak2/bound:.3f}")
+        out[topo_name] = (tl, tl2)
+    with open(os.path.join(ART, "rate_timeline.json"), "w") as f:
+        json.dump({k: v for k, v in out.items()}, f)
+    return out
+
+
+def bench_lp_build(sizes=(128,)):
+    from repro.core import topology as T
+    from repro.core.intersection import ConflictModel, FULL_DUPLEX
+    from repro.core.lp import solve_saturation_lp
+
+    for topo_name in ("mesh2d", "butterfly", "dragonfly", "fattree"):
+        for n in sizes:
+            topo = T.by_name(topo_name, n)
+            cm = ConflictModel(topo, FULL_DUPLEX)
+            t0 = time.time()
+            sol = solve_saturation_lp(topo, cm, 0)
+            dt = time.time() - t0
+            print(f"lp_build/{topo_name}{n},{dt*1e6:.0f},"
+                  f"C_GBps={sol.C/1e9:.3f}")
+
+
+def bench_eq4_prediction(n=128):
+    """Eq 4 closed form vs simulation for the selected candidate."""
+    from repro.core.bbs import broadcast_time
+
+    for topo_name in ("mesh2d", "fattree"):
+        plan, _ = _plan_cached(topo_name, n, 0)
+        for M in (1e6, 16e6, 128e6):
+            t_sim, info = broadcast_time(plan, M)
+            err = abs(info["t_opt"] - t_sim) / t_sim
+            print(f"eq4/{topo_name}{n}/{int(M/1e6)}MB,{t_sim*1e6:.1f},"
+                  f"pred_err={err:.3f};m={info['num_groups']};"
+                  f"strat={info['strategy']}")
+
+
+def bench_roofline():
+    import benchmarks.roofline as R
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = R.table(mesh)
+        for r in rows:
+            t_bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            print(f"roofline/{mesh}/{r['arch']}/{r['shape']},"
+                  f"{t_bound*1e6:.1f},"
+                  f"bound={r['bottleneck']};"
+                  f"roofline_frac={r['roofline_fraction']:.3f};"
+                  f"useful={r['useful_ratio']:.2f};"
+                  f"fits={r['fits_hbm']}")
+    return True
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="128",
+                    help="comma list of topology sizes (paper: 128..1024)")
+    ap.add_argument("--messages", default="64e3,1e6,16e6,128e6")
+    ap.add_argument("--only", default=None,
+                    help="comma list of bench names to run")
+    args = ap.parse_args(argv)
+    sizes = [int(s) for s in args.sizes.split(",")]
+    messages = [float(m) for m in args.messages.split(",")]
+    os.makedirs(ART, exist_ok=True)
+
+    benches = dict(
+        broadcast=lambda: bench_broadcast_tables(sizes, messages),
+        time_profile=bench_time_profile,
+        rate=bench_rate_timeline,
+        lp=lambda: bench_lp_build(tuple(sizes)),
+        eq4=bench_eq4_prediction,
+        roofline=bench_roofline,
+    )
+    run = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    for name in run:
+        t0 = time.time()
+        benches[name]()
+        print(f"# bench {name} wall {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

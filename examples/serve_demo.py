@@ -1,0 +1,24 @@
+"""Batched serving demo: prefill + greedy decode on a small Mamba-2 model
+(O(1) decode state) and on a dense GQA model with a KV cache.
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    print("--- mamba2 (SSD recurrent decode) ---")
+    serve_main(["--arch", "mamba2-370m", "--smoke", "--tokens", "24",
+                "--prompt-len", "16", "--batch", "2"])
+    print("--- llama-style dense (KV-cache decode) ---")
+    serve_main(["--arch", "llama3.2-3b", "--smoke", "--tokens", "24",
+                "--prompt-len", "16", "--batch", "2"])
+
+
+if __name__ == "__main__":
+    main()

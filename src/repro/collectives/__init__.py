@@ -1,0 +1,9 @@
+"""Executable collectives: BBS pipelines as jax.lax.ppermute programs."""
+
+from repro.collectives.bbs_collective import (DeviceSchedule, bbs_broadcast,
+                                              binomial_broadcast,
+                                              chain_broadcast,
+                                              make_device_schedule)
+
+__all__ = ["DeviceSchedule", "bbs_broadcast", "binomial_broadcast",
+           "chain_broadcast", "make_device_schedule"]

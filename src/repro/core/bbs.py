@@ -1,0 +1,190 @@
+"""Broadcast by Balanced Saturation — the composed solver (paper §2.6).
+
+Layers: saturation LP -> arborescence generation -> pipeline schedule ->
+profile-driven selection:
+
+1.  The LP (§2.5) bounds the achievable balanced incoming rate C and guides
+    tree packing.
+2.  Several candidate tree-sets are generated (LP-guided DFS packing at
+    several K, Hamiltonian chain, complementary double chain, binomial, BFS)
+    and each is compiled into a conflict-free cyclic pipeline (Thm 3 coloring).
+3.  Each candidate's dimensionless time-profile ratios (a_hat, b_hat) are
+    *measured once* from prefix simulations (Thm 2: T(m) = a + Δ·m; §2.3:
+    a/τ and Δ/τ are packet-size-independent for packets >> D).
+4.  Per message size, BBS selects the candidate minimizing the closed-form
+    optimum T_opt = a_hat·L + b_hat·M/B + 2·sqrt(a_hat·b_hat·L·M/B) (Eq. 4)
+    and splits the message into m_opt = sqrt(a_hat·M/(b_hat·L·B)) groups
+    (Eq. 3). Small messages fall out naturally (m = 1, shallow tree wins);
+    large messages select the saturating packing — the paper's three regimes
+    emerge from the same formula.
+
+Plans are deterministic, built once per (topology, root, mode), cheap to
+store, and reusable for any message size — the paper's "low storage / build
+offline" property. ``repro.collectives`` executes the same pipeline artifact
+with jax.lax.ppermute on real device meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import arborescence as arb
+from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
+from repro.core.lp import SaturationSolution, solve_saturation_lp
+from repro.core.schedule import Pipeline, build_pipeline
+from repro.core.simulator import EventSimulator, simulate_pipeline
+from repro.core.timeprofile import optimal_group_count, optimal_time
+from repro.core.topology import Edge, Topology
+
+
+@dataclasses.dataclass
+class Candidate:
+    name: str
+    pipeline: Pipeline
+    a_hat: float
+    b_hat: float
+
+    @property
+    def min_lambda(self) -> float:
+        return min(t.weight for t in self.pipeline.trees)
+
+    def t_opt(self, message_bytes: float, L: float, B: float) -> float:
+        # (a_hat, b_hat) are in units of tau = L + P/B with P the *minimum
+        # packet* of a group (= lambda_min * group bytes), so Eq. 4 applies to
+        # the per-packet byte stream M * lambda_min
+        return optimal_time(self.a_hat, self.b_hat,
+                            message_bytes * self.min_lambda, L, B)
+
+    def m_opt(self, message_bytes: float, L: float, B: float) -> int:
+        return optimal_group_count(self.a_hat, self.b_hat,
+                                   message_bytes * self.min_lambda, L, B)
+
+
+@dataclasses.dataclass
+class BBSPlan:
+    """Built-once broadcast plan for one (topology, root, mode)."""
+
+    topo: Topology
+    cm: ConflictModel
+    root: int
+    lp: SaturationSolution
+    candidates: List[Candidate]
+    L: float                       # minimal latency (paper's L)
+    B: float                       # maximal bandwidth (paper's B)
+
+    def select(self, message_bytes: float, top: int = 3,
+               ) -> List[Tuple[Candidate, int]]:
+        """Top candidates by the Eq.4 closed form, with their Eq.3 m_opt.
+        The caller simulates them and keeps the winner (the closed form uses
+        measured ratios, so a short simulation arbitrates its ties)."""
+        ranked = sorted(self.candidates,
+                        key=lambda c: c.t_opt(message_bytes, self.L, self.B))
+        out = []
+        for c in ranked[:top]:
+            m = max(1, c.m_opt(message_bytes, self.L, self.B))
+            K = len(c.pipeline.trees)
+            # packets must stay >= a few bytes
+            m = min(m, max(1, int(message_bytes / (64 * K)) or 1))
+            out.append((c, m))
+        return out
+
+
+def _candidate_trees(topo: Topology, sol: SaturationSolution, root: int,
+                     mode: str = FULL_DUPLEX,
+                     ) -> Dict[str, List[arb.Arborescence]]:
+    cands: Dict[str, List[arb.Arborescence]] = {}
+    cands["chain"] = [arb.chain_arborescence(topo, root)]
+    dc = arb.double_chain(topo, root)
+    for t in dc:
+        t.weight = 0.5
+    cands["double_chain"] = dc
+    root_deg = len({e for e in sol.support(1e-3) if e[0] == root})
+    for K in sorted({2, max(2, root_deg), max(2, min(8, root_deg * 2))}):
+        try:
+            cands[f"lp_pack_K{K}"] = arb.pack_arborescences(topo, sol, K=K)
+        except AssertionError:
+            pass
+    cands["binomial"] = [arb.binomial_arborescence(topo, root)]
+    cands["bfs"] = [_bfs_tree(topo, root)]
+    if topo.num_nodes >= 3:
+        cands["two_tree"] = arb.two_tree(topo, root)
+    if mode == ALL_PORT:
+        # multi-port roots can drive several disjoint trees at full rate
+        out_deg = min(6, len({e for e in topo.candidate_edges
+                              if e[0] == root}))
+        if out_deg >= 2:
+            cands[f"disjoint_bfs_K{out_deg}"] = \
+                arb.edge_disjoint_bfs_trees(topo, root, out_deg)
+    return cands
+
+
+def build_plan(topo: Topology, root: int = 0, mode: str = FULL_DUPLEX,
+               lp_solution: Optional[SaturationSolution] = None,
+               probe_groups: int = 4) -> BBSPlan:
+    cm = ConflictModel(topo, mode)
+    sol = lp_solution or solve_saturation_lp(topo, cm, root)
+    D = topo.max_latency_bandwidth_product()
+    L = min(topo.latency(e) for e in topo.candidate_edges)
+    B = max(topo.bandwidth(e) for e in topo.candidate_edges)
+
+    candidates: List[Candidate] = []
+    for name, trees in _candidate_trees(topo, sol, root, mode).items():
+        pipe = build_pipeline(topo, trees, cm)
+        K = len(trees)
+        min_lambda = min(t.weight for t in trees)
+        # probe with packets far above D (paper's asymptotic assumption)
+        group_bytes = 256.0 * D * K
+        msg = group_bytes * probe_groups
+        t_m, res, delta = simulate_pipeline(topo, cm, pipe, msg, probe_groups,
+                                            root, max_sim_groups=probe_groups)
+        t1, _, _ = simulate_pipeline(topo, cm, pipe, group_bytes, 1, root)
+        tau = L + group_bytes * min_lambda / B
+        delta = max(delta, 1e-15)
+        a = max(t1 - delta, 0.0)
+        candidates.append(Candidate(name=name, pipeline=pipe,
+                                    a_hat=a / tau, b_hat=delta / tau))
+    return BBSPlan(topo=topo, cm=cm, root=root, lp=sol,
+                   candidates=candidates, L=L, B=B)
+
+
+def _bfs_tree(topo: Topology, root: int) -> arb.Arborescence:
+    parent: Dict[int, int] = {}
+    seen = {root}
+    frontier = [root]
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for w in topo.neighbors(v):
+                if w not in seen:
+                    seen.add(w)
+                    parent[w] = v
+                    nxt.append(w)
+        frontier = nxt
+    t = arb.Arborescence(root=root, parent=parent)
+    t.validate(topo)
+    return t
+
+
+def broadcast_time(plan: BBSPlan, message_bytes: float,
+                   num_groups: Optional[int] = None,
+                   max_sim_groups: int = 6) -> Tuple[float, Dict]:
+    """Simulated BBS broadcast time: Eq.3/Eq.4 rank the candidates and pick
+    m_opt; a short prefix simulation arbitrates among the top few (the
+    closed form uses measured ratios and can tie within noise)."""
+    results = []
+    for cand, m in plan.select(message_bytes):
+        if num_groups is not None:
+            m = num_groups
+        total, res, delta = simulate_pipeline(
+            plan.topo, plan.cm, cand.pipeline, message_bytes, m, plan.root,
+            max_sim_groups=max_sim_groups)
+        results.append((total, cand, m, delta))
+    total, cand, m, delta = min(results, key=lambda r: r[0])
+    info = dict(num_groups=m, strategy=cand.name,
+                K=len(cand.pipeline.trees), rounds=cand.pipeline.d,
+                delta=delta, lp_C=plan.lp.C, a_hat=cand.a_hat,
+                b_hat=cand.b_hat,
+                t_opt=cand.t_opt(message_bytes, plan.L, plan.B))
+    return total, info

@@ -1,0 +1,292 @@
+"""Discrete-event broadcast simulator (our SimGrid replacement).
+
+Semantics match the paper's assumptions:
+  * Hockney cost per transfer: t = L_e + nbytes / B_e (non-preemptive — a
+    packet in flight cannot be interrupted, Def. 3).
+  * A transfer occupies the resources from the ConflictModel for its whole
+    duration; a resource serves one transfer at a time.
+  * A node may forward data only after fully receiving it — encoded as
+    explicit task dependencies (``deps``: indices of tasks that must complete
+    before this one starts).
+
+Each task carries a *block range* [blk_lo, blk_hi): the slice of the message
+it moves. A node is finished when its received ranges cover all blocks; the
+broadcast finish time is the max over nodes (paper's T(M)).
+
+Blocked tasks wait on per-resource queues (woken when the resource frees) or
+on dependency counters (woken on completion), so per-event work tracks local
+contention, not total task count.
+
+For pipelined schedules the paper's Theorem 2 (T(m groups) = T(1) + (m-1)·Δ)
+lets us simulate a prefix of groups and extrapolate the steady state; this is
+validated against full simulation in tests and used for the huge cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+from repro.core.intersection import ConflictModel
+from repro.core.schedule import Pipeline
+from repro.core.topology import Edge, Topology
+
+
+@dataclasses.dataclass
+class SendTask:
+    priority: Tuple
+    src: int
+    dst: int
+    nbytes: float
+    deps: Tuple[int, ...] = ()
+    blk: Tuple[int, int] = (0, 1)     # [lo, hi) message blocks carried
+    group: Optional[int] = None       # pipeline group tag (for Δ measurement)
+
+
+@dataclasses.dataclass
+class SimResult:
+    finish_time: float
+    node_finish: Dict[int, float]          # node -> time it held everything
+    deliveries: List[Tuple[float, float]]  # (time, nbytes) per completed send
+    group_finish: List[float]              # finish per pipeline group
+    started: int
+    completed: int
+
+    def rate_timeline(self, bins: int = 100) -> List[Tuple[float, float]]:
+        """Aggregated receive rate over time (bytes/s per bin) — Fig. 2."""
+        if not self.deliveries:
+            return []
+        t_end = max(t for t, _ in self.deliveries)
+        if t_end <= 0:
+            return []
+        w = t_end / bins
+        acc = [0.0] * bins
+        for t, nb in self.deliveries:
+            acc[min(bins - 1, int(t / w))] += nb
+        return [((i + 0.5) * w, acc[i] / w) for i in range(bins)]
+
+
+_WAITING, _READY, _BLOCKED, _RUNNING, _DONE = range(5)
+
+
+class EventSimulator:
+    """Resource-constrained priority simulation of dependent send tasks."""
+
+    def __init__(self, topo: Topology, cm: ConflictModel, root: int):
+        self.topo = topo
+        self.cm = cm
+        self.root = root
+
+    def run(self, tasks: Sequence[SendTask],
+            total_blocks: Optional[int] = None) -> SimResult:
+        topo, cm, root = self.topo, self.cm, self.root
+        n_tasks = len(tasks)
+        order = sorted(range(n_tasks), key=lambda i: tasks[i].priority)
+        rank = [0] * n_tasks
+        for pos, i in enumerate(order):
+            rank[i] = pos
+
+        if total_blocks is None:
+            total_blocks = max((t.blk[1] for t in tasks), default=1)
+        block_bytes: Dict[int, float] = {}
+        for t in tasks:
+            span = t.blk[1] - t.blk[0]
+            if span > 0:
+                per = t.nbytes / span
+                for b in range(*t.blk):
+                    block_bytes[b] = per
+        full_message = sum(block_bytes.get(b, 0.0) for b in range(total_blocks))
+
+        dep_left = [len(t.deps) for t in tasks]
+        children: Dict[int, List[int]] = {}
+        for i, t in enumerate(tasks):
+            for d in t.deps:
+                children.setdefault(d, []).append(i)
+
+        state = [_WAITING] * n_tasks
+        busy: Dict[Hashable, int] = {}       # resource -> slots in use
+        caps: Dict[Hashable, int] = {}
+        res_wait: Dict[Hashable, List[int]] = {}
+        ready: List[Tuple[int, int]] = []
+        resources = [cm.resources((t.src, t.dst)) for t in tasks]
+        for rs in resources:
+            for r in rs:
+                if r not in caps:
+                    caps[r] = cm.capacity(r)
+
+        for i in range(n_tasks):
+            if dep_left[i] == 0:
+                state[i] = _READY
+                heapq.heappush(ready, (rank[i], i))
+
+        events: List[Tuple[float, int, int]] = []
+        seq = 0
+        now = 0.0
+        covered: Dict[int, set] = {v: set() for v in topo.compute_nodes}
+        covered[root] = set(range(total_blocks))
+        node_bytes: Dict[int, float] = {v: 0.0 for v in topo.compute_nodes}
+        node_bytes[root] = full_message
+        node_finish: Dict[int, float] = {root: 0.0}
+        deliveries: List[Tuple[float, float]] = []
+        group_last: Dict[int, float] = {}
+        started = completed = 0
+
+        def process_ready() -> None:
+            nonlocal seq, started
+            while ready:
+                rk, i = heapq.heappop(ready)
+                if state[i] != _READY:
+                    continue
+                t = tasks[i]
+                blocked_on = [r for r in resources[i]
+                              if busy.get(r, 0) >= caps[r]]
+                if blocked_on:
+                    state[i] = _BLOCKED
+                    for r in blocked_on:
+                        res_wait.setdefault(r, []).append(i)
+                    continue
+                for r in resources[i]:
+                    busy[r] = busy.get(r, 0) + 1
+                dur = topo.latency((t.src, t.dst)) + \
+                    t.nbytes / topo.bandwidth((t.src, t.dst))
+                heapq.heappush(events, (now + dur, seq, i))
+                seq += 1
+                started += 1
+                state[i] = _RUNNING
+
+        process_ready()
+        while events:
+            now, _, i = heapq.heappop(events)
+            t = tasks[i]
+            state[i] = _DONE
+            completed += 1
+            for r in resources[i]:
+                busy[r] -= 1
+            fresh = [b for b in range(*t.blk) if b not in covered[t.dst]]
+            covered[t.dst].update(fresh)
+            node_bytes[t.dst] += sum(block_bytes.get(b, 0.0) for b in fresh)
+            if t.dst not in node_finish and \
+                    len(covered[t.dst]) >= total_blocks:
+                node_finish[t.dst] = now
+            deliveries.append((now, t.nbytes))
+            if t.group is not None:
+                group_last[t.group] = max(group_last.get(t.group, 0.0), now)
+            for j in children.get(i, ()):
+                dep_left[j] -= 1
+                if dep_left[j] == 0 and state[j] == _WAITING:
+                    state[j] = _READY
+                    heapq.heappush(ready, (rank[j], j))
+            for r in resources[i]:
+                for j in res_wait.pop(r, []):
+                    if state[j] == _BLOCKED:
+                        state[j] = _READY
+                        heapq.heappush(ready, (rank[j], j))
+            process_ready()
+
+        undone = [i for i in range(n_tasks) if state[i] != _DONE]
+        assert not undone, (
+            f"{len(undone)} tasks never ran (first: "
+            f"{[tasks[i] for i in undone[:3]]}) — dependency cycle")
+        missing = [v for v in topo.compute_nodes
+                   if len(covered[v]) < total_blocks]
+        assert not missing, f"nodes {missing[:5]} never got the full message"
+        finish = max(node_finish.values())
+        gf = [group_last[g] for g in sorted(group_last)] if group_last else []
+        return SimResult(finish_time=finish, node_finish=node_finish,
+                         deliveries=deliveries, group_finish=gf,
+                         started=started, completed=completed)
+
+
+def pipeline_tasks(pipe: Pipeline, packet_bytes: Sequence[float],
+                   num_groups: int) -> List[SendTask]:
+    """Expand a cyclic pipeline into dependent send tasks for m groups.
+
+    Block id of packet (g, k) = g * K + k. Each tree edge (u, v) for packet
+    (g, k) depends on the task that delivered (g, k) to u (absent for root).
+    Priority = (group, round index) keeps the cyclic round order whenever
+    resources allow.
+    """
+    K = len(pipe.trees)
+    tasks: List[SendTask] = []
+    deliver: Dict[Tuple[int, int, int], int] = {}   # (node, g, k) -> task idx
+    for g in range(num_groups):
+        for ri, rnd in enumerate(pipe.rounds):
+            for task in rnd:
+                u, v = task.edge
+                deps = []
+                key = (u, g, task.tree)
+                if key in deliver:
+                    deps.append(deliver[key])
+                elif u != pipe.trees[task.tree].root:
+                    deps.append(-1)  # resolved below (sender task comes later)
+                idx = len(tasks)
+                blk = g * K + task.tree
+                tasks.append(SendTask(priority=(g, ri, task.depth),
+                                      src=u, dst=v,
+                                      nbytes=packet_bytes[task.tree],
+                                      deps=tuple(deps), blk=(blk, blk + 1),
+                                      group=g))
+                deliver[(v, g, task.tree)] = idx
+    # second pass: resolve deps recorded as -1 (sender's delivery scheduled in
+    # a *later* round index than the forward — legal in cyclic schedules, the
+    # forward just slides to the next cycle)
+    fixed: List[SendTask] = []
+    for i, t in enumerate(tasks):
+        if t.deps == (-1,):
+            g = t.group
+            k = t.blk[0] - g * K
+            dep = deliver.get((t.src, g, k))
+            assert dep is not None and dep != i, \
+                f"no delivery of packet ({g},{k}) to node {t.src}"
+            t = dataclasses.replace(t, deps=(dep,))
+        fixed.append(t)
+    return fixed
+
+
+def delta_star(topo: Topology, cm: ConflictModel, pipe: Pipeline,
+               packet_bytes: Sequence[float]) -> float:
+    """The paper's Δ* lower bound (Def. 8): allow all tree tasks active at
+    once, then the steady-state period is at least the busiest intersecting
+    group's total service time: max over resources r of
+    sum_{tasks using r} (L_e + P_tree/B_e) / capacity(r)."""
+    load: Dict[Hashable, float] = {}
+    caps: Dict[Hashable, int] = {}
+    for rnd in pipe.rounds:
+        for task in rnd:
+            e = task.edge
+            dur = topo.latency(e) + packet_bytes[task.tree] / topo.bandwidth(e)
+            for r in cm.resources(e):
+                load[r] = load.get(r, 0.0) + dur
+                if r not in caps:
+                    caps[r] = cm.capacity(r)
+    return max((l / caps[r] for r, l in load.items()), default=0.0)
+
+
+def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
+                      message_bytes: float, num_groups: int, root: int,
+                      max_sim_groups: int = 6,
+                      ) -> Tuple[float, SimResult, float]:
+    """Simulate a pipelined broadcast of `message_bytes` split into
+    `num_groups` groups (each group split across trees by tree weights).
+
+    Returns (total_time, prefix_sim_result, delta). When num_groups exceeds
+    `max_sim_groups`, a prefix is simulated and Theorem 2 extrapolates:
+    T(m) = T(m0) + (m - m0) * Δ. The measured Δ (last two group finishes) can
+    under-estimate the steady state while the pipeline is still filling, so it
+    is floored by the paper's Δ* resource bound (Def. 8).
+    """
+    weights = [t.weight for t in pipe.trees]
+    group_bytes = message_bytes / num_groups
+    packet_bytes = [group_bytes * w for w in weights]
+
+    m0 = min(num_groups, max_sim_groups)
+    sim = EventSimulator(topo, cm, root)
+    res = sim.run(pipeline_tasks(pipe, packet_bytes, m0),
+                  total_blocks=m0 * len(pipe.trees))
+    d_meas = (res.group_finish[-1] - res.group_finish[-2]) if m0 >= 2 else 0.0
+    if num_groups <= m0:
+        return res.finish_time, res, d_meas
+    delta = max(d_meas, delta_star(topo, cm, pipe, packet_bytes))
+    total = res.finish_time + (num_groups - m0) * delta
+    return total, res, delta

@@ -1,0 +1,135 @@
+"""Blocked online-softmax attention (FlashAttention) as a Pallas TPU kernel.
+
+TPU adaptation: the CUDA original tiles for shared memory + warps; here tiles
+are BlockSpec VMEM windows sized for the MXU (multiples of 128 on the lane
+dim, 8/16 on sublanes). The grid walks (batch*kv_head, q_group, q_block,
+kv_block); the kv_block loop is innermost so q/accumulator tiles stay resident
+in VMEM while k/v stream from HBM. Causal blocks beyond the diagonal are
+skipped by masking (the wrapper also trims the grid where possible).
+
+Supports GQA natively: q heads are grouped per kv head, so the same k/v tile
+in VMEM serves `group` q tiles (arithmetic-intensity win on TPU — k/v HBM
+traffic is divided by the group size).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, block_q: int, block_k: int,
+                 seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)        # (block_q, d)
+    k = k_ref[0, 0].astype(jnp.float32)        # (block_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)        # (block_k, d)
+    # ragged tail blocks carry undefined padding (NaN in interpret mode);
+    # zero padded kv rows so 0-weighted NaNs cannot poison the matmuls
+    kv_pos = ki * block_k + \
+        jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0)
+    kv_valid = kv_pos < seq_k
+    k = jnp.where(kv_valid, k, 0.0)   # NaN * 0 == NaN: select, don't scale
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # mask out-of-range rows/cols (padding) and the causal triangle
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (rows < seq_q) & (cols < seq_k)
+    if causal:
+        # decode-style offset: query i attends keys <= i + (seq_k - seq_q)
+        mask &= cols <= rows + (seq_k - seq_q)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                        # (block_q, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                     # (block_q, block_k)
+    # ragged tail blocks are padded with undefined values (NaN in interpret
+    # mode); exp(-inf - m) underflows to 0 but 0 * NaN = NaN, so mask hard
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)        # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D); Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = float(scale if scale is not None else 1.0 / (d ** 0.5))
+
+    q4 = q.reshape(b * hkv, g, s, d)
+    k4 = k.reshape(b * hkv, 1, t, d)
+    v4 = v.reshape(b * hkv, 1, t, d)
+
+    block_q_eff = min(block_q, max(s, 8))
+    block_k_eff = min(block_k, max(t, 8))
+    nq = -(-s // block_q_eff)
+    nk = -(-t // block_k_eff)
+    grid = (b * hkv, g, nq, nk)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, block_q=block_q_eff,
+        block_k=block_k_eff, seq_q=s, seq_k=t)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q_eff, d),
+                         lambda bh, gi, qi, ki: (bh, gi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k_eff, d),
+                         lambda bh, gi, qi, ki: (bh, 0, ki, 0)),
+            pl.BlockSpec((1, 1, block_k_eff, d),
+                         lambda bh, gi, qi, ki: (bh, 0, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q_eff, d),
+                               lambda bh, gi, qi, ki: (bh, gi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q_eff, 1), jnp.float32),
+            pltpu.VMEM((block_q_eff, 1), jnp.float32),
+            pltpu.VMEM((block_q_eff, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k4, v4)
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``use_pallas`` flips between the Pallas TPU kernel and the pure-jnp oracle.
+On this CPU container the models default to the XLA path (Pallas TPU kernels
+cannot lower to CPU; ``interpret=True`` is for correctness tests); on TPU the
+flag enables the kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas",
+                                             "interpret"))
+def attention(q, k, v, causal: bool = True, use_pallas: bool = False,
+              interpret: bool = False):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, interpret=interpret)
+    # XLA path: O(S*T) score materialization is fine for short sequences;
+    # long sequences stream KV blocks (flash-style) to bound live memory
+    if q.shape[2] * k.shape[2] > 1024 * 2048:
+        return ref.attention_blockwise(q, k, v, causal=causal)
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "chunk"))
+def ssd(x, dt, A, B, C, use_pallas: bool = False, interpret: bool = False,
+        chunk: int = 128):
+    if use_pallas:
+        return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    if x.shape[1] > 16:
+        # chunked SSD: seq/chunk loop iterations instead of seq (the
+        # sequential scan emitted one collective per step under SPMD)
+        return ref.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    return ref.ssd_ref(x, dt, A, B, C)
+
+
+@jax.jit
+def rmsnorm(x, w):
+    return ref.rmsnorm_ref(x, w)

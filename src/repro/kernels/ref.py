@@ -1,0 +1,179 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Reference attention. Shapes: q (B, Hq, S, D), k/v (B, Hkv, T, D).
+    GQA: Hq must be a multiple of Hkv. Returns (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", probs, vf)
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def attention_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        scale: Optional[float] = None,
+                        block: int = 1024) -> jax.Array:
+    """Memory-efficient (flash-style) attention in pure jnp: lax.scan over KV
+    blocks with online softmax — O(S*block) residency instead of O(S*T).
+    This is the XLA path the models use for long sequences (the Pallas kernel
+    is the TPU fast path; both share this math)."""
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = float(scale if scale is not None else 1.0 / (d ** 0.5))
+    blk = min(block, t)
+    nb = -(-t // blk)
+    pad = nb * blk - t
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kp.reshape(b, hkv, nb, blk, d).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(b, hkv, nb, blk, d).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d)
+    rows = jnp.arange(s)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        bi, kblk, vblk = inp
+        logits = jnp.einsum("bhgsd,bhtd->bhgst", qf,
+                            kblk.astype(jnp.float32)) * scale
+        cols = bi * blk + jnp.arange(blk)
+        mask = cols[None, :] < t
+        if causal:
+            mask = mask & (cols[None, :] <= rows[:, None] + (t - s))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgst,bhtd->bhgsd", p,
+                                       vblk.astype(jnp.float32))
+        return (m_new, l_new, acc), ()
+
+    m0 = jnp.full((b, hkv, g, s, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nb), kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l).reshape(b, hq, s, d)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array) -> jax.Array:
+    """Mamba-2 SSD (state-space duality) reference: sequential scan.
+
+    Shapes: x (batch, seq, heads, dhead), dt (batch, seq, heads),
+    A (heads,) [negative decay], B/C (batch, seq, heads, dstate).
+    Returns y (batch, seq, heads, dhead).
+
+    Recurrence per head: h_t = exp(A*dt_t) * h_{t-1} + dt_t * B_t x_t^T;
+    y_t = C_t^T h_t  (h: (dstate, dhead)).
+    """
+    bsz, seq, h, dh = x.shape
+    ds = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(Af[None, :, None, None] * dtt[..., None, None])
+        hstate = hstate * decay + jnp.einsum(
+            "bh,bhs,bhd->bhsd", dtt, Bt, xt)
+        yt = jnp.einsum("bhs,bhsd->bhd", Ct, hstate)
+        return hstate, yt
+
+    h0 = jnp.zeros((bsz, h, ds, dh), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int = 128) -> jax.Array:
+    """Chunked SSD in pure jnp — the same math as the Pallas kernel: dense
+    masked matmuls within chunks (MXU work), a cheap scan across chunks for
+    the state recurrence. Replaces the O(seq)-step sequential scan on the
+    XLA path (seq/chunk iterations instead of seq)."""
+    bsz, seq, h, dh = x.shape
+    ds = B.shape[-1]
+    Lc = min(chunk, seq)
+    nc = -(-seq // Lc)
+    pad = nc * Lc - seq
+
+    def pad_seq(t):
+        if pad:
+            cfg = [(0, 0)] * t.ndim
+            cfg[1] = (0, pad)
+            t = jnp.pad(t, cfg)
+        return t
+
+    xf = pad_seq(x.astype(jnp.float32)).reshape(bsz, nc, Lc, h, dh)
+    dtf = pad_seq(dt.astype(jnp.float32)).reshape(bsz, nc, Lc, h)
+    Bf = pad_seq(B.astype(jnp.float32)).reshape(bsz, nc, Lc, h, ds)
+    Cf = pad_seq(C.astype(jnp.float32)).reshape(bsz, nc, Lc, h, ds)
+    Af = A.astype(jnp.float32)
+
+    cum = jnp.cumsum(dtf, axis=2)                        # (b, nc, Lc, h)
+    cum_end = cum[:, :, -1:, :]                          # (b, nc, 1, h)
+    # intra-chunk decay matrix L(i,j) = exp(A (cum_i - cum_j)) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((Lc, Lc), jnp.float32))
+    Ldec = jnp.exp(Af * diff) * tri[None, None, :, :, None]
+    cb = jnp.einsum("bnihs,bnjhs->bnijh", Cf, Bf)
+    w = cb * Ldec * dtf[:, :, None, :, :]
+    y = jnp.einsum("bnijh,bnjhd->bnihd", w, xf)
+
+    # chunk-boundary states: S_n = sum_j exp(A(cum_end - cum_j)) dt_j B_j x_j
+    sdec = jnp.exp(Af * (cum_end - cum)) * dtf           # (b, nc, Lc, h)
+    Sn = jnp.einsum("bnjh,bnjhs,bnjhd->bnhsd", sdec, Bf, xf)
+    gamma = jnp.exp(Af * cum_end[:, :, 0, :])            # (b, nc, h)
+
+    def scan_state(hprev, inp):
+        Sn_c, g_c = inp
+        hnew = hprev * g_c[..., None, None] + Sn_c
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, ds, dh), jnp.float32)
+    _, hins = jax.lax.scan(
+        scan_state, h0,
+        (jnp.moveaxis(Sn, 1, 0), jnp.moveaxis(gamma, 1, 0)))
+    hins = jnp.moveaxis(hins, 0, 1)                      # state entering chunk
+    y = y + jnp.einsum("bnihs,bnhsd->bnihd", Cf * jnp.exp(
+        Af * cum)[..., None], hins)
+    y = y.reshape(bsz, nc * Lc, h, dh)[:, :seq]
+    return y.astype(x.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)

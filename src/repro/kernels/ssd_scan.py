@@ -1,0 +1,125 @@
+"""Mamba-2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of a warp-level sequential
+scan, the sequence is split into chunks; within a chunk the output is a dense
+(masked, decay-weighted) matmul — MXU work — and states propagate across
+chunks through a tiny recurrence carried in VMEM scratch across grid steps
+(grid iterates chunks innermost, per (batch, head)).
+
+For chunk length Lc, per chunk and head:
+  decay(i, j)  = exp(A * (cum_dt_i - cum_dt_j))            (i >= j)
+  intra        = C_i . B_j^T * decay(i, j) * dt_j           -> (Lc, Lc) matmul
+  state_out    = exp(A*(cum_end - cum_dt_j)) * dt_j B_j x_j -> (ds, dh)
+  y_i          = intra @ x + C_i . h_in * exp(A * cum_dt_i)
+  h_out        = h_in * exp(A * cum_end) + state_out
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int, seq: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (Lc, dh)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (Lc, 1)
+    A = a_ref[0, 0]                            # scalar in SMEM-like block
+    B = b_ref[0, 0].astype(jnp.float32)        # (Lc, ds)
+    C = c_ref[0, 0].astype(jnp.float32)        # (Lc, ds)
+
+    pos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+    valid = (pos < seq).astype(jnp.float32)    # (Lc, 1)
+    dt = dt * valid                            # padded steps are no-ops
+
+    cum = jnp.cumsum(dt, axis=0)               # (Lc, 1) inclusive cumulative dt
+    cum_end = cum[-1:, :]                      # (1, 1)
+
+    # intra-chunk: L(i,j) = exp(A*(cum_i - cum_j)) for i >= j else 0
+    diff = cum - cum.reshape(1, chunk)         # (Lc, Lc): cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(A * diff), 0.0)
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Lc, Lc)
+    w = cb * L * dt.reshape(1, chunk)          # weight on x_j for output i
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    h = h_ref[...]                             # (ds, dh)
+    y += jnp.exp(A * cum) * jax.lax.dot_general(
+        C, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: h' = h * exp(A*cum_end) + sum_j exp(A*(cum_end-cum_j))
+    #                                         * dt_j * B_j x_j^T
+    sdecay = jnp.exp(A * (cum_end - cum)) * dt   # (Lc, 1)
+    h_new = h * jnp.exp(A * cum_end) + jax.lax.dot_general(
+        B * sdecay, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h_ref[...] = h_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False) -> jax.Array:
+    """x: (batch, seq, heads, dhead); dt: (batch, seq, heads);
+    A: (heads,); B, C: (batch, seq, heads, dstate). Returns like x."""
+    bsz, seq, h, dh = x.shape
+    ds = B.shape[-1]
+    chunk_eff = min(chunk, max(seq, 8))
+    nc = -(-seq // chunk_eff)
+    pad = nc * chunk_eff - seq
+
+    def to_bh(t):  # (b, s, h, ...) -> (b*h, 1, nc*chunk, ...)
+        t = jnp.moveaxis(t, 2, 1)              # (b, h, s, ...)
+        t = t.reshape((bsz * h, 1) + t.shape[2:])
+        if pad:
+            cfg = [(0, 0)] * t.ndim
+            cfg[2] = (0, pad)
+            t = jnp.pad(t, cfg)
+        return t
+
+    xb = to_bh(x)
+    dtb = to_bh(dt[..., None])
+    Bb = to_bh(B)
+    Cb = to_bh(C)
+    Ab = jnp.broadcast_to(A.astype(jnp.float32).reshape(1, h, 1, 1),
+                          (bsz, h, 1, 1)).reshape(bsz * h, 1, 1, 1)
+
+    grid = (bsz * h, 1, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk_eff, seq=seq)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk_eff, dh), lambda bh, z, ci: (bh, 0, ci, 0)),
+            pl.BlockSpec((1, 1, chunk_eff, 1), lambda bh, z, ci: (bh, 0, ci, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda bh, z, ci: (bh, 0, 0, 0)),
+            pl.BlockSpec((1, 1, chunk_eff, ds), lambda bh, z, ci: (bh, 0, ci, 0)),
+            pl.BlockSpec((1, 1, chunk_eff, ds), lambda bh, z, ci: (bh, 0, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk_eff, dh),
+                               lambda bh, z, ci: (bh, 0, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz * h, 1, nc * chunk_eff, dh),
+                                       x.dtype),
+        scratch_shapes=[pltpu.VMEM((ds, dh), jnp.float32)],
+        interpret=interpret,
+    )(xb, dtb, Ab, Bb, Cb)
+    out = out.reshape(bsz, h, nc * chunk_eff, dh)[:, :, :seq]
+    return jnp.moveaxis(out, 1, 2)

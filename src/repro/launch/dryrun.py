@@ -1,0 +1,250 @@
+# The dry-run needs 512 placeholder devices BEFORE jax initializes; these two
+# lines must run before any other import (jax locks the device count on first
+# init). Never set this globally — smoke tests and benches see 1 device.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + \
+    os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod AOT dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real train/prefill/serve step with
+ShapeDtypeStruct stand-ins (no allocation), compiles it, and records:
+  * memory_analysis (per-device bytes: argument/output/temp/peak),
+  * cost_analysis FLOPs + bytes accessed,
+  * collective bytes parsed from the optimized HLO (all-gather, all-reduce,
+    reduce-scatter, all-to-all, collective-permute operand sizes),
+into benchmarks/artifacts/dryrun_<mesh>_<arch>_<shape>.json — the roofline
+table (§Roofline) and EXPERIMENTS.md read these artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all            # full single+multi sweep
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, cells, skipped_cells
+from repro.configs.base import SHAPES
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM
+from repro.runtime import steps as rsteps
+from repro.runtime.hlo_cost import analyze_hlo
+from repro.optim.adamw import adamw_init
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))), "benchmarks", "artifacts")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dtype_bytes(dt: str) -> int:
+    return {"f64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
+            "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+            "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1}.get(dt, 4)
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_operand_bytes(op_args: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(op_args):
+        dt, dims = m.group(1), m.group(2)
+        if dt in ("token",):
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _dtype_bytes(dt)
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output-shape bytes of every collective op in the optimized HLO.
+
+    HLO lines look like:  %x = bf16[8,128]{1,0} all-gather(...), replica_groups=...
+    We count the *result* payload per collective (wire volume proxy; for
+    all-reduce the wire volume equals the payload on a ring, for all-gather
+    the result is the gathered size which is the total moved volume)."""
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+(\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if kind == c or kind.startswith(c + "-"):
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = _parse_operand_bytes(m.group(1))
+        per_kind[base] += nbytes
+        counts[base] += 1
+    return per_kind, counts
+
+
+def input_specs(arch: str, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    model = LM(cfg)
+    if cell.kind == "train":
+        return dict(batch=make_batch_specs(cfg, cell))
+    if cell.kind == "prefill":
+        return dict(batch=make_batch_specs(cfg, cell))
+    # decode
+    toks = make_batch_specs(cfg, cell, for_decode=True)
+    enc_len = 4096 if cfg.family == "encdec" else 0
+    cache = rsteps.abstract_cache(model, cell.global_batch, cell.seq_len,
+                                  enc_len=enc_len)
+    return dict(tokens=toks["tokens"], cache=cache)
+
+
+def lower_cell(arch: str, shape: str, mesh, remat: str = "none",
+               rules_override=None):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model = LM(cfg, remat=remat if cell.kind == "train" else "none",
+               batch_axes=batch_axes)
+
+    params_shape = rsteps.abstract_params(model)
+    pshard = rsteps.param_shardings(mesh, model, params_shape)
+    specs = input_specs(arch, shape)
+
+    if cell.kind == "train":
+        opt_shape = rsteps.abstract_opt(params_shape)
+        oshard = rsteps.opt_shardings(mesh, model, params_shape)
+        bshard = rsteps.batch_shardings(mesh, cfg, specs["batch"])
+        step = rsteps.make_train_step(model)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None))
+        args = (params_shape, opt_shape, specs["batch"])
+    elif cell.kind == "prefill":
+        bshard = rsteps.batch_shardings(mesh, cfg, specs["batch"])
+        fn = rsteps.make_serve_prefill(model)
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard),
+                         out_shardings=None)
+        args = (params_shape, specs["batch"])
+    else:
+        long_ctx = cell.global_batch == 1
+        cshard = rsteps.cache_shardings(mesh, model, specs["cache"], long_ctx)
+        tshard = rsteps.batch_shardings(
+            mesh, cfg, dict(tokens=specs["tokens"]))["tokens"]
+        fn = rsteps.make_serve_step(model)
+        jitted = jax.jit(fn, in_shardings=(pshard, cshard, tshard),
+                         out_shardings=(None, cshard))
+        args = (params_shape, specs["cache"], specs["tokens"])
+
+    lowered = jitted.lower(*args)
+    return lowered
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, remat: str = "none",
+             save: bool = True, verbose: bool = True):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        lowered = lower_cell(arch, shape, mesh, remat=remat)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        txt = compiled.as_text()
+        hc = analyze_hlo(txt)   # loop-aware FLOPs/collectives (per device)
+
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec = dict(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips, remat=remat,
+        flops=hc.flops,
+        dot_bytes=hc.dot_bytes,
+        xla_flops_loop_unaware=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=hc.collective_bytes,
+        collective_counts=hc.collective_counts,
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+            output_bytes=getattr(mem, "output_size_in_bytes", 0),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+            peak_bytes=getattr(mem, "peak_memory_in_bytes", 0),
+        ),
+        lower_s=t_lower, compile_s=t_compile,
+    )
+    if verbose:
+        gb = rec["memory"]["peak_bytes"] / 2**30
+        print(f"[{mesh_name}] {arch:24s} {shape:12s} "
+              f"flops={rec['flops']:.3e} dotB={rec['dot_bytes']:.3e} "
+              f"coll={sum(hc.collective_bytes.values()):.3e}B "
+              f"peak={gb:.2f}GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+    if save:
+        os.makedirs(ARTIFACTS, exist_ok=True)
+        path = os.path.join(ARTIFACTS,
+                            f"dryrun_{mesh_name}_{arch}_{shape}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="none", choices=["none", "dots"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for multi in (False, True):
+            for arch in ARCHS:
+                for shape in cells(arch):
+                    mesh_name = "pod2x16x16" if multi else "pod16x16"
+                    path = os.path.join(
+                        ARTIFACTS, f"dryrun_{mesh_name}_{arch}_{shape}.json")
+                    if args.skip_existing and os.path.exists(path):
+                        print(f"skip {mesh_name} {arch} {shape}", flush=True)
+                        continue
+                    try:
+                        run_cell(arch, shape, multi, remat=args.remat)
+                    except Exception as e:   # noqa: BLE001
+                        failures.append((mesh_name, arch, shape, repr(e)))
+                        print(f"FAIL [{mesh_name}] {arch} {shape}: {e}",
+                              flush=True)
+                        traceback.print_exc()
+                for shape in skipped_cells(arch):
+                    print(f"SKIP(noted) {arch} {shape}: dense-attention arch,"
+                          " see DESIGN.md §Arch-applicability", flush=True)
+        print(f"\ndry-run sweep complete; failures: {len(failures)}")
+        for f in failures:
+            print("  FAIL", *f)
+        raise SystemExit(1 if failures else 0)
+
+    assert args.arch and args.shape
+    run_cell(args.arch, args.shape, args.multi_pod, remat=args.remat)
+
+
+if __name__ == "__main__":
+    main()

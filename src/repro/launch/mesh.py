@@ -1,0 +1,21 @@
+"""Production meshes. Importing this module never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (TPU v5e pod), axes (data, model).
+    Multi-pod: 2 pods = 512 chips, axes (pod, data, model) — the pod axis is
+    the DCN/inter-pod dimension (pure data parallel)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host has (examples/tests); axes (data, model)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,48 @@
+"""AdamW in pure JAX (pytree-native; optimizer state shards like params)."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return dict(mu=jax.tree.map(zeros, params),
+                nu=jax.tree.map(zeros, params),
+                step=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state: Dict, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> Tuple[Dict, Dict]:
+    step = state["step"] + 1
+    # global-norm clip
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** step)
+        nu_hat = nu / (1 - b2 ** step)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps) + \
+            weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, dict(mu=new_mu, nu=new_nu, step=step)

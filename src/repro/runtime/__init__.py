@@ -1,0 +1,1 @@
+from repro.runtime import compression, sharding, steps, supervisor  # noqa: F401

@@ -1,0 +1,100 @@
+"""Logical-axis sharding rules (t5x-style) with divisibility fallbacks.
+
+Rules map logical dim names to mesh axes. ``resolve`` checks divisibility
+against the actual array shape and mesh, dropping the annotation when it does
+not divide (e.g. kv_heads=8 on a model axis of 16 falls back to replicated,
+while the decode cache shards its seq dim instead — rule order encodes the
+preference).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Tuple[str, ...]]
+
+# each logical name maps to an ordered list of candidate mesh-axis tuples;
+# the first whose product divides the dim size wins
+DEFAULT_RULES: Dict[str, Sequence[Union[Tuple[str, ...], None]]] = {
+    "batch": [("pod", "data"), ("data",), None],
+    "vocab": [("model",), None],
+    "heads_x_hd": [("model",), None],
+    "kv_x_hd": [("model",), None],
+    "d_ff": [("model",), None],
+    "expert_ff": [None],
+    "experts": [("model",), None],
+    # FSDP/ZeRO: weight matrices shard their d_model dim over the data axis
+    # (GSPMD all-gathers weights per layer, reduce-scatters grads — exactly
+    # FSDP); without it a 480B MoE needs 555 GiB/chip. Activations are
+    # unaffected (their sharding comes from batch/heads propagation).
+    "d_model": [("pod", "data"), ("data",), None],
+    "d_inner": [("model",), None],
+    "bc_dim": [("model",), None],
+    "conv_dim": [("model",), None],
+    "ssm_heads": [("model",), None],
+    "kv_heads": [("model",), None],
+    "kv_seq": [("model",), None],
+    "long_seq": [("pod", "data", "model"), ("data", "model"), ("model",),
+                 None],
+    "layers": [None],
+    "seq": [None],
+}
+
+
+def axis_size(mesh: Mesh, axes: Optional[Tuple[str, ...]]) -> int:
+    if not axes:
+        return 1
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def resolve_dim(mesh: Mesh, logical: Optional[str], size: int,
+                rules: Optional[Dict] = None,
+                used: Optional[set] = None):
+    rules = rules or DEFAULT_RULES
+    if logical is None:
+        return None
+    for cand in rules.get(logical, [None]):
+        if cand is None:
+            return None
+        axes = tuple(a for a in cand if a in mesh.shape)
+        if not axes:
+            continue
+        if used and any(a in used for a in axes):
+            continue
+        if size % axis_size(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def spec_for(mesh: Mesh, logical_dims: Sequence[Optional[str]],
+             shape: Sequence[int], rules: Optional[Dict] = None) -> P:
+    used: set = set()
+    parts = []
+    for name, size in zip(logical_dims, shape):
+        r = resolve_dim(mesh, name, size, rules, used)
+        if r is not None:
+            for a in (r if isinstance(r, tuple) else (r,)):
+                used.add(a)
+        parts.append(r)
+    return P(*parts)
+
+
+def tree_specs(mesh: Mesh, dims_tree, shapes_tree, rules=None):
+    """Map a pytree of logical-dims tuples + matching shapes to specs."""
+    return jax.tree.map(
+        lambda dims, arr: spec_for(mesh, dims, arr.shape, rules),
+        dims_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(i, (str, type(None))) for i in x))
+
+
+def shardings(mesh: Mesh, specs_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,123 @@
+"""train_step / serve_step builders with explicit shardings (pjit path).
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the trainer executes on CPU for the examples. Microbatch gradient
+accumulation is a ``lax.scan`` (XLA overlaps the DP reduce of microbatch i
+with the compute of i+1 — compute/comm overlap for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.data.pipeline import batch_logical_dims, make_batch_specs
+from repro.models.model import LM
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.runtime import sharding as shd
+
+
+@dataclasses.dataclass
+class CompiledCell:
+    kind: str
+    fn: Any                      # jitted function
+    in_shardings: Any
+    out_shardings: Any
+    arg_specs: Tuple             # ShapeDtypeStructs to lower with
+
+
+def param_shardings(mesh: Mesh, model: LM, params_shape) -> Any:
+    dims = model.param_dims()
+    specs = shd.tree_specs(mesh, dims, params_shape)
+    return shd.shardings(mesh, specs)
+
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, batch_shape) -> Any:
+    dims = batch_logical_dims(cfg)
+    dims = {k: v for k, v in dims.items() if k in batch_shape}
+    specs = shd.tree_specs(mesh, dims, batch_shape)
+    return shd.shardings(mesh, specs)
+
+
+def cache_shardings(mesh: Mesh, model: LM, cache_shape, long_ctx: bool):
+    dims = dict(model.cache_dims())
+    if long_ctx:
+        # batch=1 cells: shard the cache sequence across everything we have
+        dims = {k: tuple("long_seq" if d == "kv_seq" else d for d in v)
+                for k, v in dims.items()}
+    dims = {k: v for k, v in dims.items() if k in cache_shape}
+    specs = shd.tree_specs(mesh, dims, cache_shape)
+    return shd.shardings(mesh, specs)
+
+
+def make_train_step(model: LM, lr: float = 3e-4, microbatches: int = 1):
+    """(params, opt, batch) -> (params, opt, metrics)."""
+
+    def train_step(params, opt, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches,
+                                  x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(acc, mbatch):
+                l, g = jax.value_and_grad(model.loss)(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc,
+                                   dict(loss=l, grads=g))
+                return acc, ()
+
+            zero = dict(loss=jnp.zeros((), jnp.float32),
+                        grads=jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params))
+            acc, _ = jax.lax.scan(acc_fn, zero, mb)
+            loss = acc["loss"] / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, acc["grads"])
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return params, opt, dict(loss=loss, grad_norm=gnorm)
+
+    return train_step
+
+
+def make_serve_prefill(model: LM):
+    def prefill(params, batch):
+        return model.forward(params, batch)
+
+    return prefill
+
+
+def make_serve_step(model: LM):
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+def opt_shardings(mesh: Mesh, model: LM, params_shape):
+    pshard = param_shardings(mesh, model, params_shape)
+    return dict(mu=pshard, nu=pshard,
+                step=NamedSharding(mesh, P()))
+
+
+def abstract_params(model: LM):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_opt(params_shape):
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+def abstract_cache(model: LM, batch: int, max_seq: int, enc_len: int = 0):
+    return jax.eval_shape(
+        functools.partial(model.init_cache, batch, max_seq, enc_len=enc_len))

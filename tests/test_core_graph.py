@@ -1,0 +1,119 @@
+"""Unit + property tests for topologies, conflicts, coloring, LP."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+from repro.core.coloring import konig_edge_coloring, greedy_resource_coloring
+from repro.core.intersection import (ALL_PORT, FULL_DUPLEX, HALF_DUPLEX,
+                                     ConflictModel)
+from repro.core.lp import solve_saturation_lp, verify_solution
+
+
+@pytest.mark.parametrize("name,n", [
+    ("mesh2d", 128), ("butterfly", 64), ("dragonfly", 128),
+    ("fattree", 128), ("torus2d", 16), ("ring", 8), ("hypercube", 16),
+])
+def test_topology_valid(name, n):
+    topo = T.hypercube(4) if name == "hypercube" else T.by_name(name, n)
+    topo.validate()
+    assert topo.num_nodes == n
+    # cost model sanity
+    e = topo.candidate_edges[0]
+    assert topo.cost(e, 1e6) > topo.cost(e, 1e3)
+
+
+def test_mesh_routing_multi_hop():
+    topo = T.mesh2d(4, 4)
+    # 0 -> 5 is not a cable: route exists, occupies 2 cables, 2x latency
+    assert not topo.is_cable((0, 5))
+    assert len(topo.links((0, 5))) == 2
+    assert topo.latency((0, 5)) == pytest.approx(2 * topo.latency((0, 1)))
+
+
+def test_hierarchical_nic_contention():
+    topo = T.fat_tree(32, radix=8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    # node 1's send and node 1's receive share nic:1 => conflict
+    assert cm.conflict((1, 2), (3, 1))
+    # distinct nodes on distinct routers do not conflict
+    assert not cm.conflict((1, 2), (9, 10))
+
+
+def test_duplex_modes():
+    topo = T.ring(8)
+    full = ConflictModel(topo, FULL_DUPLEX)
+    half = ConflictModel(topo, HALF_DUPLEX)
+    allp = ConflictModel(topo, ALL_PORT)
+    # full duplex: recv while sending ok
+    assert full.compatible([(0, 1), (1, 2)])
+    # half duplex: node 1 busy
+    assert not half.compatible([(0, 1), (1, 2)])
+    # one-port: two sends from same node conflict under full duplex
+    assert not full.compatible([(0, 1), (0, 7)])
+    # all-port: both fine (distinct links)
+    assert allp.compatible([(0, 1), (0, 7)])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9)),
+                min_size=1, max_size=60))
+def test_konig_coloring_property(edges):
+    color, d = konig_edge_coloring(edges)
+    deg = {}
+    for (u, v) in edges:
+        deg[("L", u)] = deg.get(("L", u), 0) + 1
+        deg[("R", v)] = deg.get(("R", v), 0) + 1
+    # Thm 3: exactly max-degree colors
+    assert d == max(deg.values())
+    assert max(color) + 1 <= d
+    seen = set()
+    for c, (u, v) in zip(color, edges):
+        assert (("L", u), c) not in seen and (("R", v), c) not in seen
+        seen.add((("L", u), c))
+        seen.add((("R", v), c))
+
+
+@pytest.mark.parametrize("name,n,mode,expect", [
+    ("mesh2d", 128, FULL_DUPLEX, 50e9),           # C = B (Hamiltonian chain)
+    ("butterfly", 64, FULL_DUPLEX, 12.5e9),       # C = B
+    ("ring", 8, ALL_PORT, 100e9),                 # C = 2B (both directions)
+    ("torus2d", 16, ALL_PORT, 200e9),             # C = 4B (all four links)
+])
+def test_lp_known_optima(name, n, mode, expect):
+    topo = T.by_name(name, n)
+    cm = ConflictModel(topo, mode)
+    sol = solve_saturation_lp(topo, cm, root=0)
+    verify_solution(topo, cm, sol)
+    assert sol.C == pytest.approx(expect, rel=1e-4)
+
+
+@pytest.mark.parametrize("name", ["dragonfly", "fattree"])
+def test_lp_hierarchical_half_rate(name):
+    """Paper §3.2: single-NIC fabrics saturate at C = (B/2) * n/(n-1)."""
+    topo = T.by_name(name, 128)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    sol = solve_saturation_lp(topo, cm, root=0)
+    verify_solution(topo, cm, sol)
+    B = topo.bandwidth(topo.candidate_edges[0])
+    n = topo.num_nodes
+    assert sol.C == pytest.approx(B / 2 * n / (n - 1), rel=1e-3)
+
+
+def test_lp_constraints_all_roots():
+    topo = T.mesh2d(4, 4)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    for root in (0, 5, 15):
+        sol = solve_saturation_lp(topo, cm, root=root)
+        verify_solution(topo, cm, sol)
+
+
+def test_greedy_coloring_capacity():
+    topo = T.fat_tree(32, radix=8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    # 8 concurrent cross-pod sends from pod0 to pod1: trunk has 8 slots
+    tasks = [(i, i + 8) for i in range(8)]
+    colors, d = greedy_resource_coloring(tasks, cm)
+    assert d == 1  # all simultaneous: disjoint NICs, trunk capacity 8

@@ -1,0 +1,131 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol_for(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,t,d", [
+    (1, 4, 4, 128, 128, 64),     # MHA square
+    (2, 8, 2, 128, 128, 64),     # GQA group 4
+    (1, 8, 8, 64, 64, 128),      # wide head
+    (1, 4, 1, 96, 96, 64),       # MQA, ragged seq (pad path)
+    (1, 8, 4, 1, 256, 64),       # decode: one query vs long KV
+    (2, 4, 4, 37, 37, 32),       # odd sizes exercise masking
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, s, t, d, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, t, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, t, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True,
+                          block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol_for(dtype))
+
+
+def test_flash_attention_block_shapes():
+    """Block size must not change the result (tiling correctness)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 160, 64))
+    k = jax.random.normal(ks[1], (1, 4, 160, 64))
+    v = jax.random.normal(ks[2], (1, 4, 160, 64))
+    outs = [flash_attention(q, k, v, causal=True, interpret=True,
+                            block_q=bq, block_k=bk)
+            for bq, bk in [(32, 32), (64, 128), (128, 64), (160, 160)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,dh,ds,chunk", [
+    (1, 64, 2, 32, 16, 32),
+    (2, 100, 4, 64, 32, 32),      # ragged: seq % chunk != 0
+    (1, 256, 2, 64, 128, 128),
+    (1, 32, 8, 128, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, s, h, dh, ds, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, dh), dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+          ).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, h, ds), dtype)
+    C = jax.random.normal(ks[4], (b, s, h, ds), dtype)
+    out = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               **tol_for(dtype))
+
+
+def test_ssd_chunk_invariance():
+    ks = jax.random.split(KEY, 5)
+    b, s, h, dh, ds = 1, 128, 2, 32, 16
+    x = jax.random.normal(ks[0], (b, s, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, h, ds))
+    C = jax.random.normal(ks[4], (b, s, h, ds))
+    outs = [ssd_scan(x, dt, A, B, C, chunk=c, interpret=True)
+            for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-4)
+
+
+def test_ops_dispatch():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 16, 32))
+    k = jax.random.normal(ks[1], (1, 2, 16, 32))
+    v = jax.random.normal(ks[2], (1, 2, 16, 32))
+    a = ops.attention(q, k, v, causal=True, use_pallas=False)
+    b_ = ops.attention(q, k, v, causal=True, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(a, b_, atol=2e-5, rtol=2e-5)
+
+
+def test_rmsnorm():
+    x = jax.random.normal(KEY, (4, 8, 64))
+    w = jnp.ones((64,)) * 1.5
+    out = ops.rmsnorm(x, w)
+    var = np.mean(np.asarray(x) ** 2, axis=-1, keepdims=True)
+    np.testing.assert_allclose(
+        out, np.asarray(x) / np.sqrt(var + 1e-6) * 1.5, atol=1e-5, rtol=1e-5)
+
+
+def test_ssd_chunked_matches_sequential():
+    ks = jax.random.split(KEY, 5)
+    b, s, h, dh, ds = 2, 100, 4, 64, 32
+    x = jax.random.normal(ks[0], (b, s, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, h, ds))
+    C = jax.random.normal(ks[4], (b, s, h, ds))
+    out = ref.ssd_chunked(x, dt, A, B, C, chunk=32)
+    want = ref.ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+
+def test_attention_blockwise_matches_ref():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 100, 32))
+    k = jax.random.normal(ks[1], (1, 2, 100, 32))
+    v = jax.random.normal(ks[2], (1, 2, 100, 32))
+    for blk in (17, 50, 128):
+        out = ref.attention_blockwise(q, k, v, causal=True, block=blk)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)

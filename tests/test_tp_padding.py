@@ -1,0 +1,66 @@
+"""GQA head-padding under TP: the padded model must compute the exact same
+function as the unpadded one (kv copies + zero-weighted dummy q slots)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.layers import padded_heads
+from repro.models.model import LM
+
+BASE = get_config("llama3.2-3b").scaled(
+    layers=2, d_model=96, heads=6, kv_heads=2, d_ff=128, vocab=256,
+    head_dim=16, num_patches=0)
+
+
+@pytest.mark.parametrize("heads,kv", [(6, 2), (4, 2), (8, 8), (12, 4)])
+def test_padded_counts_divisible(heads, kv):
+    cfg = BASE.scaled(heads=heads, kv_heads=kv, tp_pad=16)
+    hq_p, hkv_p, g_p = padded_heads(cfg)
+    assert hkv_p % 16 == 0
+    assert hq_p == hkv_p * g_p
+    assert hq_p >= heads and hkv_p >= kv
+
+
+def test_forward_equivalence():
+    m1 = LM(BASE.scaled(tp_pad=1))
+    m16 = LM(BASE.scaled(tp_pad=16))
+    p1 = m1.init(jax.random.PRNGKey(0))
+    p16 = m16.init(jax.random.PRNGKey(0))
+    batch = dict(tokens=jax.random.randint(jax.random.PRNGKey(1), (2, 12),
+                                           0, 256))
+    np.testing.assert_allclose(
+        np.asarray(m1.forward(p1, batch), np.float32),
+        np.asarray(m16.forward(p16, batch), np.float32), atol=1e-2, rtol=1e-2)
+
+
+def test_decode_equivalence():
+    m1 = LM(BASE.scaled(tp_pad=1))
+    m16 = LM(BASE.scaled(tp_pad=16))
+    p1 = m1.init(jax.random.PRNGKey(0))
+    p16 = m16.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, 256)
+    c1 = m1.init_cache(1, 8)
+    c16 = m16.init_cache(1, 8)
+    assert c16["k"].shape[2] == 16      # padded kv heads in the cache
+    for t in range(6):
+        l1, c1 = m1.decode_step(p1, c1, toks[:, t:t + 1])
+        l16, c16 = m16.decode_step(p16, c16, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(l1, np.float32),
+                                   np.asarray(l16, np.float32),
+                                   atol=1e-2, rtol=1e-2)
+
+
+def test_full_configs_pad_cleanly():
+    from repro.configs import ARCHS
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        if cfg.heads == 0:
+            continue
+        hq_p, hkv_p, g_p = padded_heads(cfg)
+        assert hkv_p % 16 == 0, arch
+        assert hq_p % 16 == 0, arch
+        # padding waste stays bounded (< 35% extra q slots)
+        assert hq_p <= 1.35 * cfg.heads, (arch, hq_p)
