@@ -1,0 +1,16 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-smoke
+
+test:            ## tier-1 suite
+	$(PY) -m pytest -x -q
+
+test-fast:       ## skip the slow end-to-end jax tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:           ## full simulator benchmark (mesh2d n=256, acceptance cell)
+	$(PY) -m benchmarks.simbench --min-speedup 5
+
+bench-smoke:     ## quick perf-regression smoke on a small topology
+	$(PY) -m benchmarks.simbench --smoke

@@ -1,0 +1,133 @@
+"""Simulator-engine microbenchmarks: reference oracle vs flat-array engine.
+
+Three measurements, CSV ``name,value,derived`` on stdout (matching
+benchmarks/run.py conventions):
+
+  raw_run        tasks/sec of EventSimulator.run vs CompiledSim.run on the
+                 *identical* expanded task list (pure event-loop speed)
+  pipeline       end-to-end pipelined broadcast: reference = expand m groups
+                 + simulate; fast = CompiledSim.run_pipeline (steady-state
+                 prefix + analytic Δ extrapolation). Chain pipelines are
+                 exactly periodic, so the extrapolation is exact here and
+                 finish times are asserted equal (rel 1e-9) before the
+                 speedup is reported — the acceptance cell (mesh2d n=256,
+                 16 groups).
+  build_plan     wall time of bbs.build_plan per topology with the fast
+                 engine (the end-to-end "plan once offline" cost)
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.simbench            # full (n=256)
+  PYTHONPATH=src python -m benchmarks.simbench --smoke    # small + quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_engines(topo_name: str, n: int, groups: int, message_bytes: float,
+                  repeats: int) -> float:
+    """Raw-loop and end-to-end pipeline comparison; returns the pipeline
+    speedup (the acceptance number)."""
+    from repro.core import arborescence as arb
+    from repro.core import topology as T
+    from repro.core.fastsim import CompiledSim
+    from repro.core.intersection import FULL_DUPLEX, ConflictModel
+    from repro.core.schedule import build_pipeline
+    from repro.core.simulator import EventSimulator, pipeline_tasks
+
+    topo = T.by_name(topo_name, n)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    packet_bytes = [message_bytes / groups]
+    tag = f"{topo_name}_{n}_m{groups}"
+
+    # -- raw event loop on identical tasks -----------------------------------
+    tasks = pipeline_tasks(pipe, packet_bytes, groups)
+    ref_sim = EventSimulator(topo, cm, 0)
+    fast_sim = CompiledSim(topo, cm, 0)
+    t_ref = _best_of(lambda: ref_sim.run(tasks, total_blocks=groups), repeats)
+    t_fast = _best_of(lambda: fast_sim.run(tasks, total_blocks=groups),
+                      repeats)
+    print(f"raw_run_reference_{tag},{t_ref * 1e6:.0f},"
+          f"{len(tasks) / t_ref:.0f} tasks/s")
+    print(f"raw_run_fast_{tag},{t_fast * 1e6:.0f},"
+          f"{len(tasks) / t_fast:.0f} tasks/s")
+    print(f"raw_run_speedup_{tag},{t_ref / t_fast:.2f},x")
+
+    # -- end-to-end pipelined broadcast (incl. task expansion) ---------------
+    ref_finish = [0.0]
+
+    def ref_e2e():
+        res = ref_sim.run(pipeline_tasks(pipe, packet_bytes, groups),
+                          total_blocks=groups)
+        ref_finish[0] = res.finish_time
+
+    fast_run = [None]
+
+    def fast_e2e():
+        fast_run[0] = fast_sim.run_pipeline(pipe, packet_bytes, groups,
+                                            max_sim_groups=6)
+
+    t_ref = _best_of(ref_e2e, repeats)
+    t_fast = _best_of(fast_e2e, repeats)
+    run = fast_run[0]
+    err = abs(run.res.finish_time - ref_finish[0]) / ref_finish[0]
+    assert err < 1e-9, f"engines disagree: rel err {err:.2e}"
+    speedup = t_ref / t_fast
+    print(f"pipeline_reference_{tag},{t_ref * 1e6:.0f},us")
+    print(f"pipeline_fast_{tag},{t_fast * 1e6:.0f},"
+          f"steady={run.steady} sim_groups={run.sim_groups}")
+    print(f"pipeline_speedup_{tag},{speedup:.2f},x (finish rel err {err:.1e})")
+    return speedup
+
+
+def bench_build_plan(topo_name: str, n: int) -> None:
+    from repro.core import topology as T
+    from repro.core.bbs import build_plan
+
+    topo = T.by_name(topo_name, n)
+    t0 = time.perf_counter()
+    plan = build_plan(topo, root=0)
+    dt = time.perf_counter() - t0
+    print(f"build_plan_{topo_name}_{n},{dt * 1e6:.0f},"
+          f"{len(plan.candidates)} candidates")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small topology, quick run (perf-regression smoke)")
+    ap.add_argument("--topo", default="mesh2d")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--groups", type=int, default=16)
+    ap.add_argument("--message", type=float, default=16e6)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="exit nonzero if the pipeline speedup is below this")
+    args = ap.parse_args(argv)
+
+    n = args.n or (64 if args.smoke else 256)
+    speedup = bench_engines(args.topo, n, args.groups, args.message,
+                            args.repeats)
+    bench_build_plan(args.topo, 64 if args.smoke else 128)
+    if args.min_speedup is not None and speedup < args.min_speedup:
+        print(f"FAIL: pipeline speedup {speedup:.2f}x "
+              f"< floor {args.min_speedup}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

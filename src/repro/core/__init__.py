@@ -1,4 +1,4 @@
 """BBS core: the paper's contribution (topology, LP, trees, schedule, sim)."""
 
-from repro.core import arborescence, baselines, bbs, coloring, intersection, \
-    lp, schedule, simulator, timeprofile, topology  # noqa: F401
+from repro.core import arborescence, baselines, bbs, coloring, fastsim, \
+    intersection, lp, schedule, simulator, timeprofile, topology  # noqa: F401

@@ -15,7 +15,8 @@ the event simulator.
   * mpi_bcast     — MPICH-style dispatcher: binomial below 512 KiB, SRDA above.
 
 All generators return SendTask lists (explicit deps; block ranges for partial
-messages); the shared EventSimulator charges identical network costs as BBS.
+messages); the shared simulator engine (fast by default, the EventSimulator
+oracle via ``engine="reference"``) charges identical network costs as BBS.
 """
 
 from __future__ import annotations
@@ -25,7 +26,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import arborescence as arb
 from repro.core.intersection import ConflictModel
-from repro.core.simulator import EventSimulator, SendTask, SimResult
+from repro.core.simulator import (DEFAULT_ENGINE, EventSimulator, SendTask,
+                                  SimResult, make_engine)
 from repro.core.topology import Edge, Topology
 
 
@@ -272,7 +274,8 @@ BASELINES = {
 
 
 def simulate_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
-                      nbytes: float) -> SimResult:
+                      nbytes: float, engine: str = DEFAULT_ENGINE) -> SimResult:
     tasks = BASELINES[name](topo, root, nbytes)
     total_blocks = max(t.blk[1] for t in tasks)
-    return EventSimulator(topo, cm, root).run(tasks, total_blocks=total_blocks)
+    sim = make_engine(topo, cm, root, engine=engine)
+    return sim.run(tasks, total_blocks=total_blocks)

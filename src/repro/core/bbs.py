@@ -34,7 +34,8 @@ from repro.core import arborescence as arb
 from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
 from repro.core.lp import SaturationSolution, solve_saturation_lp
 from repro.core.schedule import Pipeline, build_pipeline
-from repro.core.simulator import EventSimulator, simulate_pipeline
+from repro.core.simulator import (DEFAULT_ENGINE, EventSimulator,
+                                  simulate_pipeline)
 from repro.core.timeprofile import optimal_group_count, optimal_time
 from repro.core.topology import Edge, Topology
 
@@ -122,7 +123,7 @@ def _candidate_trees(topo: Topology, sol: SaturationSolution, root: int,
 
 def build_plan(topo: Topology, root: int = 0, mode: str = FULL_DUPLEX,
                lp_solution: Optional[SaturationSolution] = None,
-               probe_groups: int = 4) -> BBSPlan:
+               probe_groups: int = 4, engine: str = DEFAULT_ENGINE) -> BBSPlan:
     cm = ConflictModel(topo, mode)
     sol = lp_solution or solve_saturation_lp(topo, cm, root)
     D = topo.max_latency_bandwidth_product()
@@ -138,8 +139,10 @@ def build_plan(topo: Topology, root: int = 0, mode: str = FULL_DUPLEX,
         group_bytes = 256.0 * D * K
         msg = group_bytes * probe_groups
         t_m, res, delta = simulate_pipeline(topo, cm, pipe, msg, probe_groups,
-                                            root, max_sim_groups=probe_groups)
-        t1, _, _ = simulate_pipeline(topo, cm, pipe, group_bytes, 1, root)
+                                            root, max_sim_groups=probe_groups,
+                                            engine=engine)
+        t1, _, _ = simulate_pipeline(topo, cm, pipe, group_bytes, 1, root,
+                                     engine=engine)
         tau = L + group_bytes * min_lambda / B
         delta = max(delta, 1e-15)
         a = max(t1 - delta, 0.0)
@@ -169,7 +172,8 @@ def _bfs_tree(topo: Topology, root: int) -> arb.Arborescence:
 
 def broadcast_time(plan: BBSPlan, message_bytes: float,
                    num_groups: Optional[int] = None,
-                   max_sim_groups: int = 6) -> Tuple[float, Dict]:
+                   max_sim_groups: int = 6,
+                   engine: str = DEFAULT_ENGINE) -> Tuple[float, Dict]:
     """Simulated BBS broadcast time: Eq.3/Eq.4 rank the candidates and pick
     m_opt; a short prefix simulation arbitrates among the top few (the
     closed form uses measured ratios and can tie within noise)."""
@@ -179,7 +183,7 @@ def broadcast_time(plan: BBSPlan, message_bytes: float,
             m = num_groups
         total, res, delta = simulate_pipeline(
             plan.topo, plan.cm, cand.pipeline, message_bytes, m, plan.root,
-            max_sim_groups=max_sim_groups)
+            max_sim_groups=max_sim_groups, engine=engine)
         results.append((total, cand, m, delta))
     total, cand, m, delta = min(results, key=lambda r: r[0])
     info = dict(num_groups=m, strategy=cand.name,

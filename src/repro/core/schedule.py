@@ -26,6 +26,21 @@ class Task:
 
 
 @dataclasses.dataclass
+class FlatTasks:
+    """Flat per-task lists for one pipeline group (see Pipeline.flat_tasks)."""
+
+    tree: List[int]
+    src: List[int]
+    dst: List[int]
+    depth: List[int]
+    round_ix: List[int]
+    dep: List[int]     # template index of the in-group dependency, -1 if none
+
+    def __len__(self) -> int:
+        return len(self.src)
+
+
+@dataclasses.dataclass
 class Pipeline:
     """Cyclic broadcast schedule: rounds of simultaneous (tree, edge) sends."""
 
@@ -36,6 +51,47 @@ class Pipeline:
     @property
     def d(self) -> int:
         return len(self.rounds)
+
+    def flat_tasks(self) -> "FlatTasks":
+        """One-group task template as parallel flat lists, built once.
+
+        Enumeration order matches ``simulator.pipeline_tasks`` (round-major,
+        round order within a round) so the fast engine replays the identical
+        event schedule. ``dep[i]`` is the template index of the task that
+        delivers packet ``tree[i]`` to ``src[i]`` (-1 at the tree root); a dep
+        index larger than ``i`` is the cyclic slide to the next period.
+        """
+        ft = self.__dict__.get("_flat_tasks")
+        if ft is None:
+            tree_ix: List[int] = []
+            srcs: List[int] = []
+            dsts: List[int] = []
+            depths: List[int] = []
+            round_ix: List[int] = []
+            deliver: Dict[Tuple[int, int], int] = {}   # (node, tree) -> idx
+            for ri, rnd in enumerate(self.rounds):
+                for t in rnd:
+                    idx = len(srcs)
+                    tree_ix.append(t.tree)
+                    srcs.append(t.edge[0])
+                    dsts.append(t.edge[1])
+                    depths.append(t.depth)
+                    round_ix.append(ri)
+                    deliver[(t.edge[1], t.tree)] = idx
+            deps: List[int] = []
+            for i, u in enumerate(srcs):
+                k = tree_ix[i]
+                if u == self.trees[k].root:
+                    deps.append(-1)
+                else:
+                    dep = deliver.get((u, k))
+                    assert dep is not None and dep != i, \
+                        f"no delivery of tree {k} to node {u}"
+                    deps.append(dep)
+            ft = self._flat_tasks = FlatTasks(
+                tree=tree_ix, src=srcs, dst=dsts, depth=depths,
+                round_ix=round_ix, dep=deps)
+        return ft
 
     def validate(self) -> None:
         seen: Dict[Tuple[int, Edge], bool] = {}

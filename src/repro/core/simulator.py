@@ -20,6 +20,19 @@ contention, not total task count.
 For pipelined schedules the paper's Theorem 2 (T(m groups) = T(1) + (m-1)·Δ)
 lets us simulate a prefix of groups and extrapolate the steady state; this is
 validated against full simulation in tests and used for the huge cells.
+
+Two engines implement these semantics:
+
+  * ``EventSimulator`` (here) — the pure-Python reference oracle, kept simple
+    and close to the paper's definitions;
+  * ``repro.core.fastsim.CompiledSim`` — the flat-array engine (interned
+    resource ids, precompiled Hockney constants, counter-based coverage, and
+    a steady-state Thm-2 fast path for cyclic pipelines). Full simulations
+    replay the identical event schedule, so they match the oracle bit for
+    bit; the steady-state path shares the reference extrapolation semantics.
+
+``make_engine``/``simulate_pipeline`` select via ``engine="fast"|"reference"``
+(fast is the default everywhere; tests compare the two).
 """
 
 from __future__ import annotations
@@ -68,6 +81,19 @@ class SimResult:
 
 
 _WAITING, _READY, _BLOCKED, _RUNNING, _DONE = range(5)
+
+DEFAULT_ENGINE = "fast"
+
+
+def make_engine(topo: Topology, cm: ConflictModel, root: int,
+                engine: str = DEFAULT_ENGINE):
+    """Simulator factory: the reference oracle or the flat-array engine."""
+    if engine == "reference":
+        return EventSimulator(topo, cm, root)
+    if engine == "fast":
+        from repro.core.fastsim import CompiledSim
+        return CompiledSim(topo, cm, root)
+    raise ValueError(f"unknown engine {engine!r}")
 
 
 class EventSimulator:
@@ -265,20 +291,35 @@ def delta_star(topo: Topology, cm: ConflictModel, pipe: Pipeline,
 
 def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
                       message_bytes: float, num_groups: int, root: int,
-                      max_sim_groups: int = 6,
+                      max_sim_groups: int = 6, engine: str = DEFAULT_ENGINE,
                       ) -> Tuple[float, SimResult, float]:
     """Simulate a pipelined broadcast of `message_bytes` split into
     `num_groups` groups (each group split across trees by tree weights).
 
-    Returns (total_time, prefix_sim_result, delta). When num_groups exceeds
+    Returns (total_time, sim_result, delta). When num_groups exceeds
     `max_sim_groups`, a prefix is simulated and Theorem 2 extrapolates:
     T(m) = T(m0) + (m - m0) * Δ. The measured Δ (last two group finishes) can
     under-estimate the steady state while the pipeline is still filling, so it
-    is floored by the paper's Δ* resource bound (Def. 8).
+    is floored by the paper's Δ* resource bound (Def. 8). Both engines apply
+    the same estimate; when the fast engine's prefix was exactly periodic its
+    result additionally covers all groups (extrapolated node finishes), not
+    just the prefix.
     """
     weights = [t.weight for t in pipe.trees]
     group_bytes = message_bytes / num_groups
     packet_bytes = [group_bytes * w for w in weights]
+
+    if engine == "fast":
+        from repro.core.fastsim import CompiledSim
+        run = CompiledSim(topo, cm, root).run_pipeline(
+            pipe, packet_bytes, num_groups, max_sim_groups=max_sim_groups)
+        if run.complete:
+            return run.res.finish_time, run.res, run.delta
+        delta = max(run.delta, delta_star(topo, cm, pipe, packet_bytes))
+        total = run.res.finish_time + (num_groups - run.sim_groups) * delta
+        return total, run.res, delta
+    if engine != "reference":
+        raise ValueError(f"unknown engine {engine!r}")
 
     m0 = min(num_groups, max_sim_groups)
     sim = EventSimulator(topo, cm, root)

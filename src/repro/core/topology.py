@@ -66,14 +66,30 @@ class Topology:
     def compute_nodes(self) -> range:
         return range(self.num_nodes)
 
+    def _adjacency(self) -> Tuple[Dict[int, List[Edge]], Dict[int, List[Edge]],
+                                  Dict[int, List[int]]]:
+        """(out-edges, in-edges, sorted neighbor ids) per node, built once from
+        ``candidate_edges`` (which is fixed after construction)."""
+        adj = self.__dict__.get("_adj_maps")
+        if adj is None:
+            out: Dict[int, List[Edge]] = {i: [] for i in self.compute_nodes}
+            inn: Dict[int, List[Edge]] = {i: [] for i in self.compute_nodes}
+            for e in self.candidate_edges:
+                out[e[0]].append(e)
+                inn[e[1]].append(e)
+            neigh = {i: sorted({j for (_, j) in out[i]})
+                     for i in self.compute_nodes}
+            adj = self._adj_maps = (out, inn, neigh)
+        return adj
+
     def out_edges(self, i: int) -> List[Edge]:
-        return [e for e in self.candidate_edges if e[0] == i]
+        return list(self._adjacency()[0][i])
 
     def in_edges(self, i: int) -> List[Edge]:
-        return [e for e in self.candidate_edges if e[1] == i]
+        return list(self._adjacency()[1][i])
 
     def neighbors(self, i: int) -> List[int]:
-        return sorted({j for (a, j) in self.candidate_edges if a == i})
+        return list(self._adjacency()[2][i])
 
     def uniform(self) -> bool:
         es = self.candidate_edges

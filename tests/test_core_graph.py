@@ -3,7 +3,12 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:   # optional test extra (see requirements-dev.txt)
+    HAVE_HYPOTHESIS = False
 
 from repro.core import topology as T
 from repro.core.coloring import konig_edge_coloring, greedy_resource_coloring
@@ -57,10 +62,7 @@ def test_duplex_modes():
     assert allp.compatible([(0, 1), (0, 7)])
 
 
-@settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9)),
-                min_size=1, max_size=60))
-def test_konig_coloring_property(edges):
+def _check_konig_coloring(edges):
     color, d = konig_edge_coloring(edges)
     deg = {}
     for (u, v) in edges:
@@ -74,6 +76,24 @@ def test_konig_coloring_property(edges):
         assert (("L", u), c) not in seen and (("R", v), c) not in seen
         seen.add((("L", u), c))
         seen.add((("R", v), c))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 9), st.integers(0, 9)),
+                    min_size=1, max_size=60))
+    def test_konig_coloring_property(edges):
+        _check_konig_coloring(edges)
+else:
+    @pytest.mark.parametrize("edges", [
+        [(0, 0)],
+        [(0, 1), (0, 2), (1, 1), (2, 1)],
+        [(i, (i * 3 + 1) % 7) for i in range(20)],
+        [(i % 4, i % 5) for i in range(40)],
+        [(0, 0)] * 6 + [(1, 0), (0, 1)],
+    ])
+    def test_konig_coloring_property(edges):
+        _check_konig_coloring(edges)
 
 
 @pytest.mark.parametrize("name,n,mode,expect", [

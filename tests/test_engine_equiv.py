@@ -1,0 +1,163 @@
+"""Fast engine (CompiledSim) vs reference oracle (EventSimulator) equivalence.
+
+The fast engine replays the reference event schedule on flat arrays, so full
+simulations must match *bit for bit*: finish_time, per-node finish times, the
+measured period Δ, delivery records and start/complete counts. The cyclic
+steady-state fast path (prefix simulation + analytic extrapolation) is checked
+against a full reference run of every group.
+"""
+
+import pytest
+
+from repro.core import arborescence as arb
+from repro.core import topology as T
+from repro.core.baselines import BASELINES, simulate_baseline
+from repro.core.fastsim import CompiledSim
+from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
+from repro.core.schedule import build_pipeline
+from repro.core.simulator import (EventSimulator, pipeline_tasks,
+                                  simulate_pipeline)
+
+
+def _topo(name):
+    if name == "mesh2d":
+        return T.mesh2d(4, 8)
+    if name == "dragonfly":
+        return T.dragonfly(32)
+    if name == "fattree":
+        return T.fat_tree(32, radix=8)
+    raise ValueError(name)
+
+
+def _delta(res):
+    gf = res.group_finish
+    return gf[-1] - gf[-2] if len(gf) >= 2 else 0.0
+
+
+@pytest.fixture(scope="module")
+def topos():
+    return {name: _topo(name) for name in ("mesh2d", "dragonfly", "fattree")}
+
+
+@pytest.mark.parametrize("groups", [1, 4, 16])
+@pytest.mark.parametrize("mode", [FULL_DUPLEX, ALL_PORT])
+@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree"])
+def test_run_identical_on_grid(name, mode, groups, topos):
+    """Same task list, both engines, full simulation: identical results."""
+    topo = topos[name]
+    cm = ConflictModel(topo, mode)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    packet_bytes = [2e5]
+    tasks = pipeline_tasks(pipe, packet_bytes, groups)
+    ref = EventSimulator(topo, cm, 0).run(tasks, total_blocks=groups)
+    fast = CompiledSim(topo, cm, 0).run(tasks, total_blocks=groups)
+    assert fast.finish_time == ref.finish_time
+    assert fast.node_finish == ref.node_finish
+    assert _delta(fast) == _delta(ref)
+    assert fast.group_finish == ref.group_finish
+    assert fast.deliveries == ref.deliveries
+    assert (fast.started, fast.completed) == (ref.started, ref.completed)
+
+    # the compiled pipeline expansion (no SendTask objects) matches too
+    run = CompiledSim(topo, cm, 0).run_pipeline(pipe, packet_bytes, groups)
+    assert run.complete
+    assert run.res.finish_time == ref.finish_time
+    assert run.res.node_finish == ref.node_finish
+    assert run.delta == _delta(ref)
+
+
+@pytest.mark.parametrize("mode", [FULL_DUPLEX, ALL_PORT])
+@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree"])
+def test_multitree_pipeline_identical(name, mode, topos):
+    """Branchier K=2 schedules (double chain) also replay identically."""
+    topo = topos[name]
+    cm = ConflictModel(topo, mode)
+    trees = arb.double_chain(topo, 0)
+    for t in trees:
+        t.weight = 0.5
+    pipe = build_pipeline(topo, trees, cm)
+    packet_bytes = [1e5, 1e5]
+    m = 6
+    tasks = pipeline_tasks(pipe, packet_bytes, m)
+    ref = EventSimulator(topo, cm, 0).run(tasks, total_blocks=m * 2)
+    run = CompiledSim(topo, cm, 0).run_pipeline(pipe, packet_bytes, m)
+    assert run.res.finish_time == ref.finish_time
+    assert run.res.node_finish == ref.node_finish
+    assert run.delta == _delta(ref)
+
+
+def test_steady_state_extrapolation_exact():
+    """The cyclic fast path (simulate a prefix, derive Δ analytically) must
+    reproduce the full 16-group reference simulation."""
+    topo = T.mesh2d(4, 8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    packet_bytes = [1e5]
+    m = 16
+    full = EventSimulator(topo, cm, 0).run(
+        pipeline_tasks(pipe, packet_bytes, m), total_blocks=m)
+    run = CompiledSim(topo, cm, 0).run_pipeline(pipe, packet_bytes, m,
+                                                max_sim_groups=6)
+    assert run.steady and run.complete and run.sim_groups == 6
+    assert run.res.finish_time == pytest.approx(full.finish_time, rel=1e-9)
+    assert set(run.res.node_finish) == set(full.node_finish)
+    for v, t in full.node_finish.items():
+        assert run.res.node_finish[v] == pytest.approx(t, rel=1e-9, abs=1e-18)
+    assert run.delta == pytest.approx(_delta(full), rel=1e-9)
+    assert run.res.completed == full.completed
+
+
+def test_transient_periodicity_matches_reference_estimate():
+    """ring16 + double chain: the simulated prefix is exactly periodic but
+    the full run alternates periods (later groups perturb earlier ones), so
+    neither engine can extrapolate exactly. The fast steady-state path must
+    then produce the *same* Δ*-floored Theorem-2 estimate as the reference
+    — equal totals and Δ, never a silently different (unfloored) number."""
+    topo = T.ring(16)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    trees = arb.double_chain(topo, 0)
+    for t in trees:
+        t.weight = 0.5
+    pipe = build_pipeline(topo, trees, cm)
+    m = 20
+    tf, _, df = simulate_pipeline(topo, cm, pipe, 2e5 * m, m, 0,
+                                  max_sim_groups=6, engine="fast")
+    tr, _, dr = simulate_pipeline(topo, cm, pipe, 2e5 * m, m, 0,
+                                  max_sim_groups=6, engine="reference")
+    assert tf == tr and df == dr
+
+
+def test_unknown_engine_rejected():
+    topo = T.ring(8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate_pipeline(topo, cm, pipe, 1e6, 2, 0, engine="turbo")
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate_baseline(topo, cm, "binomial", 0, 1e6, engine="Fast")
+
+
+def test_simulate_pipeline_engines_agree():
+    """simulate_pipeline: fast vs reference totals on full prefix sims."""
+    topo = T.mesh2d(4, 8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    for m in (1, 4, 8):
+        tf, rf, df = simulate_pipeline(topo, cm, pipe, 1e6, m, 0,
+                                       max_sim_groups=m, engine="fast")
+        tr, rr, dr = simulate_pipeline(topo, cm, pipe, 1e6, m, 0,
+                                       max_sim_groups=m, engine="reference")
+        assert tf == tr and df == dr
+        assert rf.node_finish == rr.node_finish
+
+
+@pytest.mark.parametrize("name", sorted(BASELINES))
+def test_baseline_engines_identical(name):
+    """Generic task lists (multi-block SRDA scatter ranges included) match."""
+    topo = T.mesh2d(4, 8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    ref = simulate_baseline(topo, cm, name, 0, 3.2e6, engine="reference")
+    fast = simulate_baseline(topo, cm, name, 0, 3.2e6, engine="fast")
+    assert fast.finish_time == ref.finish_time
+    assert fast.node_finish == ref.node_finish
+    assert fast.deliveries == ref.deliveries
