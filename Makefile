@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-smoke
+.PHONY: test test-fast bench bench-smoke bench-tables
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -14,3 +14,6 @@ bench:           ## full simulator benchmark (mesh2d n=256, acceptance cell)
 
 bench-smoke:     ## quick perf-regression smoke on a small topology
 	$(PY) -m benchmarks.simbench --smoke
+
+bench-tables:    ## Tables B1-B8 full grid, n=128..1024 (plans via PlanStore)
+	$(PY) -m benchmarks.run --full --only broadcast

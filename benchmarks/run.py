@@ -9,9 +9,13 @@
   bench_roofline           assigned-arch roofline terms from dry-run artifacts
 
 Output format: ``name,us_per_call,derived`` CSV on stdout.
-Full paper grid: ``--sizes 128,256,512,1024 --messages all`` (the default
-trims to the fast subset so `python -m benchmarks.run` completes on CPU in
-minutes; results are cached under benchmarks/artifacts/).
+Full paper grid: ``--full`` (= ``--sizes 128,256,512,1024 --messages all``);
+the default trims to the fast subset so `python -m benchmarks.run` completes
+on CPU in minutes. Plans round-trip exclusively through
+``repro.core.planstore.PlanStore`` (versioned, fingerprint-keyed artifacts
+under benchmarks/artifacts/plans/ — stale or drifted artifacts are rebuilt,
+never silently reused), so the n=512/1024 cells pay the plan build once
+across runs.
 """
 
 from __future__ import annotations
@@ -19,7 +23,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import pickle
 import sys
 import time
 
@@ -28,44 +31,40 @@ ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 ALGOS = ("bbs", "binomial", "pipeline", "srda", "glf", "bine", "mpi_bcast")
 
 
+_STORE = None
 _PLANS = {}
 
 
-def _plan_cached(topo_name: str, n: int, root: int = 0):
-    from repro.core import topology as T
-    from repro.core.bbs import build_plan
-    if (topo_name, n, root) in _PLANS:
-        return _PLANS[(topo_name, n, root)]
-    os.makedirs(os.path.join(ART, "plans"), exist_ok=True)
-    path = os.path.join(ART, "plans", f"{topo_name}_{n}_r{root}.pkl")
-    if os.path.exists(path):
-        try:
-            with open(path, "rb") as f:
-                out = pickle.load(f)
-            _PLANS[(topo_name, n, root)] = out
-            return out
-        except Exception:
-            os.remove(path)   # stale/partial cache entry
-    topo = T.by_name(topo_name, n)
-    t0 = time.time()
-    plan = build_plan(topo, root=root)
-    build_s = time.time() - t0
-    try:
-        # write-temp-then-rename: a failed dump must never leave a partial
-        # file behind (hierarchical topologies hold unpicklable closures)
-        blob = pickle.dumps((plan, build_s))
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(blob)
-        os.rename(tmp, path)
-    except (AttributeError, pickle.PicklingError, TypeError):
-        pass
-    _PLANS[(topo_name, n, root)] = (plan, build_s)
+def plan_store():
+    """The process-wide PlanStore rooted at benchmarks/artifacts/plans."""
+    global _STORE
+    if _STORE is None:
+        from repro.core.planstore import PlanStore
+        _STORE = PlanStore(os.path.join(ART, "plans"))
+    return _STORE
+
+
+def _plan_cached(topo_name: str, n: int, root: int = 0, topo=None):
+    """Plan via the PlanStore, memoized by (name, n, root) so hot benchmark
+    loops skip topology rebuild + fingerprinting on repeat lookups."""
+    key = (topo_name, n, root)
+    hit = _PLANS.get(key)
+    if hit is not None:
+        return hit
+    if topo is None:
+        from repro.core import topology as T
+        topo = T.by_name(topo_name, n)
+    plan, build_s, _cached = plan_store().get_or_build(topo, root=root)
+    _PLANS[key] = (plan, build_s)
     return plan, build_s
 
 
 def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
-    """Paper Tables B1-B8 (mean over sampled roots instead of all n)."""
+    """Paper Tables B1-B8 (mean over sampled roots instead of all n).
+
+    Scales to the full n=128..1024 sweep (``--full``): per-(topology, n,
+    root) plans — including each candidate's compiled steady-state template —
+    come from the PlanStore, so only the first sweep pays the plan builds."""
     from repro.core import topology as T
     from repro.core.baselines import simulate_baseline
     from repro.core.bbs import broadcast_time
@@ -74,6 +73,7 @@ def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
     rows = []
     for topo_name in ("mesh2d", "butterfly", "dragonfly", "fattree"):
         for n in sizes:
+            t_cell = time.time()
             topo = T.by_name(topo_name, n)
             cm = ConflictModel(topo, FULL_DUPLEX)
             for M in messages:
@@ -83,7 +83,8 @@ def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
                     for root in roots:
                         root = root % n
                         if algo == "bbs":
-                            plan, _ = _plan_cached(topo_name, n, root)
+                            plan, _ = _plan_cached(topo_name, n, root,
+                                                   topo=topo)
                             t, _ = broadcast_time(plan, M)
                         else:
                             t = simulate_baseline(topo, cm, algo, root,
@@ -102,6 +103,8 @@ def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
                     if k != "bbs":
                         print(f"bcast/{topo_name}{n}/{int(M/1e3)}KB/{k},"
                               f"{v*1e6:.1f},")
+            print(f"# cell {topo_name}{n} wall {time.time()-t_cell:.1f}s",
+                  file=sys.stderr)
     with open(os.path.join(ART, "broadcast_tables.json"), "w") as f:
         json.dump(rows, f)
     return rows
@@ -215,15 +218,29 @@ def bench_roofline():
 
 
 def main(argv=None) -> None:
+    from repro.core.topology import PAPER_MESSAGE_SIZES
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sizes", default="128",
-                    help="comma list of topology sizes (paper: 128..1024)")
-    ap.add_argument("--messages", default="64e3,1e6,16e6,128e6")
+    ap.add_argument("--sizes", default=None,
+                    help="comma list of topology sizes (paper: 128..1024; "
+                         "default 128, or all four under --full)")
+    ap.add_argument("--messages", default=None,
+                    help="comma list of message bytes, or 'all' for the "
+                         "paper's seven sizes (default 64e3,1e6,16e6,128e6, "
+                         "or 'all' under --full)")
+    ap.add_argument("--full", action="store_true",
+                    help="default unset --sizes/--messages to the full paper "
+                         "grid: n=128..1024 x all message sizes (plans "
+                         "cached via PlanStore)")
     ap.add_argument("--only", default=None,
                     help="comma list of bench names to run")
     args = ap.parse_args(argv)
-    sizes = [int(s) for s in args.sizes.split(",")]
-    messages = [float(m) for m in args.messages.split(",")]
+    sizes_arg = args.sizes or ("128,256,512,1024" if args.full else "128")
+    messages_arg = args.messages or ("all" if args.full
+                                     else "64e3,1e6,16e6,128e6")
+    sizes = [int(s) for s in sizes_arg.split(",")]
+    messages = list(PAPER_MESSAGE_SIZES) if messages_arg == "all" \
+        else [float(m) for m in messages_arg.split(",")]
     os.makedirs(ART, exist_ok=True)
 
     benches = dict(

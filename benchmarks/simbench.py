@@ -13,7 +13,11 @@ benchmarks/run.py conventions):
                  speedup is reported — the acceptance cell (mesh2d n=256,
                  16 groups).
   build_plan     wall time of bbs.build_plan per topology with the fast
-                 engine (the end-to-end "plan once offline" cost)
+                 engine (the end-to-end "plan once offline" cost), plus the
+                 single-probe vs legacy double-probe speedup of the probe
+                 phase (LP excluded; the separate m=1 simulation per
+                 candidate is gone — its time is derived from the compiled
+                 probe run's own group-0 prefix)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.simbench            # full (n=256)
@@ -93,9 +97,11 @@ def bench_engines(topo_name: str, n: int, groups: int, message_bytes: float,
     return speedup
 
 
-def bench_build_plan(topo_name: str, n: int) -> None:
+def bench_build_plan(topo_name: str, n: int, repeats: int = 3) -> None:
     from repro.core import topology as T
     from repro.core.bbs import build_plan
+    from repro.core.intersection import FULL_DUPLEX, ConflictModel
+    from repro.core.lp import solve_saturation_lp
 
     topo = T.by_name(topo_name, n)
     t0 = time.perf_counter()
@@ -103,6 +109,23 @@ def bench_build_plan(topo_name: str, n: int) -> None:
     dt = time.perf_counter() - t0
     print(f"build_plan_{topo_name}_{n},{dt * 1e6:.0f},"
           f"{len(plan.candidates)} candidates")
+
+    # single-probe vs legacy double-probe build (end-to-end minus the shared
+    # LP solve — tree construction and coloring are identical in both, so
+    # this bounds the probe-restructure gain from below; caches warm from
+    # the build above)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    sol = solve_saturation_lp(topo, cm, 0)
+    t_single = _best_of(lambda: build_plan(topo, root=0, lp_solution=sol),
+                        repeats)
+    t_double = _best_of(lambda: build_plan(topo, root=0, lp_solution=sol,
+                                           double_probe=True), repeats)
+    print(f"build_plan_noLP_single_probe_{topo_name}_{n},"
+          f"{t_single * 1e6:.0f},us")
+    print(f"build_plan_noLP_double_probe_{topo_name}_{n},"
+          f"{t_double * 1e6:.0f},us")
+    print(f"build_plan_noLP_speedup_{topo_name}_{n},"
+          f"{t_double / t_single:.2f},x (single- vs double-probe, excl LP)")
 
 
 def main(argv=None) -> int:

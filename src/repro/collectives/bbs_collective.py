@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.routing import CompiledTopology
 from repro.core.schedule import Pipeline
 
 
@@ -56,44 +57,45 @@ class DeviceSchedule:
 _NOSEND = -(10 ** 6)
 
 
-def make_device_schedule(pipe: Pipeline, num_devices: int) -> DeviceSchedule:
+def make_device_schedule(pipe: Pipeline, num_devices: int,
+                         compiled: Optional[CompiledTopology] = None,
+                         ) -> DeviceSchedule:
     """Compile a Pipeline into static ppermute tables.
 
     arrival(v, k) = cycle (0-based) at which v receives tree k's group-0
     packet: arr(child) = arr(parent) + (edge round <= parent's in-round).
+    Arrivals are computed from the pipeline's compiled steady-state template
+    (``Pipeline.flat_tasks()`` — the same artifact the fast engine replays
+    and the PlanStore persists) in one depth-ordered pass: a task's sender
+    received its packet at a strictly smaller tree depth, so every parent
+    arrival is resolved before its children (no recursion, chain pipelines of
+    any length included).
+
+    With ``compiled`` (the fabric's ``CompiledTopology``), every scheduled
+    edge is checked to be a single physical hop — ppermute moves one value
+    per (src, dst) pair, so a multi-hop virtual edge would silently model a
+    different network than the simulator charged for.
     """
     K = len(pipe.trees)
-    d = pipe.d
     root = pipe.trees[0].root
+    ft = pipe.flat_tasks()
 
-    # round index of each (tree, edge)
-    round_of: Dict[Tuple[int, Tuple[int, int]], int] = {}
-    for r, rnd in enumerate(pipe.rounds):
-        for task in rnd:
-            round_of[(task.tree, task.edge)] = r
+    if compiled is not None:
+        for u, v in zip(ft.src, ft.dst):
+            assert compiled.hops(u, v) == 1, \
+                f"pipeline edge ({u}, {v}) is not a physical link " \
+                f"(hops={compiled.hops(u, v)}); ppermute cannot route it"
 
     arr: Dict[Tuple[int, int], int] = {}       # (tree, node) -> arrival cycle
     in_round: Dict[Tuple[int, int], int] = {}  # (tree, node) -> round received
-    for k, tree in enumerate(pipe.trees):
+    for k in range(K):
         arr[(k, root)] = 0
         in_round[(k, root)] = -1               # root holds packets pre-round-0
-
-        def resolve(v: int) -> None:
-            if (k, v) in arr:
-                return
-            p = tree.parent[v]
-            resolve(p)
-            r_e = round_of[(k, (p, v))]
-            bump = 1 if r_e <= in_round[(k, p)] else 0
-            arr[(k, v)] = arr[(k, p)] + bump
-            in_round[(k, v)] = r_e
-
-        import sys
-        old = sys.getrecursionlimit()
-        sys.setrecursionlimit(max(old, 4 * num_devices + 100))
-        for v in tree.parent:
-            resolve(v)
-        sys.setrecursionlimit(old)
+    for i in sorted(range(len(ft)), key=lambda i: ft.depth[i]):
+        k, u, v, r_e = ft.tree[i], ft.src[i], ft.dst[i], ft.round_ix[i]
+        bump = 1 if r_e <= in_round[(k, u)] else 0
+        arr[(k, v)] = arr[(k, u)] + bump
+        in_round[(k, v)] = r_e
 
     # split every pipeline round into matchings: ppermute ships one value per
     # device, so an all-port round (several sends per chip) becomes several

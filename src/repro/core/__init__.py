@@ -1,4 +1,5 @@
 """BBS core: the paper's contribution (topology, LP, trees, schedule, sim)."""
 
 from repro.core import arborescence, baselines, bbs, coloring, fastsim, \
-    intersection, lp, schedule, simulator, timeprofile, topology  # noqa: F401
+    intersection, lp, planstore, routing, schedule, simulator, timeprofile, \
+    topology  # noqa: F401

@@ -17,6 +17,12 @@ the event simulator.
 All generators return SendTask lists (explicit deps; block ranges for partial
 messages); the shared simulator engine (fast by default, the EventSimulator
 oracle via ``engine="reference"``) charges identical network costs as BBS.
+
+Routed sends — srda's recursive-doubling exchanges, glf/bine's virtual-rank
+strides, the rank-order chain — address arbitrary endpoint pairs; on flat
+fabrics their latency and cable sets come from the precompiled all-pairs
+next-hop tables (``repro.core.routing``), an O(path-length) lookup per send
+instead of a per-pair BFS.
 """
 
 from __future__ import annotations

@@ -94,15 +94,13 @@ def greedy_resource_coloring(tasks: Sequence[Edge], cm: ConflictModel,
     shortens the pipeline fill. Bound: <= d* + gap; verified per round."""
     order = sorted(range(len(tasks)),
                    key=lambda i: (priority[i] if priority is not None else 0, i))
-    res_used: Dict[Hashable, Dict[int, int]] = {}
-    caps: Dict[Hashable, int] = {}
+    ct = cm.compiled()
+    caps = ct.caps                 # dense capacities, grown by interning
+    res_used: Dict[int, Dict[int, int]] = {}
     color = [0] * len(tasks)
     ncolors = 0
     for i in order:
-        rs = cm.resources(tasks[i])
-        for r in rs:
-            if r not in caps:
-                caps[r] = cm.capacity(r)
+        rs = ct.edge_ids(tasks[i])
         c = 0
         while any(res_used.setdefault(r, {}).get(c, 0) >= caps[r] for r in rs):
             c += 1

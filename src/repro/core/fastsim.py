@@ -4,8 +4,10 @@
 precompiled representation:
 
   * every ``ConflictModel`` resource is interned to a dense integer id once
-    per (topology, mode) via ``ConflictModel.index()`` — the event loop tracks
-    occupancy in flat lists instead of hashing resource tuples;
+    per (topology, mode) via the compiled routing layer
+    (``ConflictModel.compiled()`` -> ``repro.core.routing.CompiledTopology``)
+    — the event loop tracks occupancy in flat lists instead of hashing
+    resource tuples;
   * per-edge Hockney constants (latency, bandwidth) and per-task resource-id
     tuples are computed once up front (numpy-vectorized durations), so the
     loop never calls back into ``Topology``/``ConflictModel``;
@@ -81,7 +83,7 @@ class CompiledSim:
         self.topo = topo
         self.cm = cm
         self.root = root
-        self.idx = cm.index()
+        self.idx = cm.compiled()
 
     # -- generic task lists (drop-in for EventSimulator.run) -----------------
 

@@ -27,8 +27,9 @@ enforce at most one active edge per resource at any instant.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Sequence, Tuple
 
+from repro.core.routing import CompiledTopology
 from repro.core.topology import Edge, Topology
 
 FULL_DUPLEX = "full_duplex"
@@ -36,69 +37,6 @@ HALF_DUPLEX = "half_duplex"
 ALL_PORT = "all_port"
 
 Resource = Tuple
-
-
-class ResourceIndex:
-    """Dense integer interning of a ConflictModel's resources.
-
-    Built lazily once per (topology, mode) via ``ConflictModel.index()``: every
-    resource tuple maps to a stable small integer id, capacities live in a flat
-    list indexed by id, and per-edge resource tuples / id tuples are cached so
-    hot paths (conflict checks, greedy coloring, the fast simulator engine)
-    never rebuild tuples or re-derive capacities per call.
-    """
-
-    __slots__ = ("cm", "caps", "_ids", "_edge_res", "_edge_ids",
-                 "_edge_unit_ids", "_edge_cost")
-
-    def __init__(self, cm: "ConflictModel"):
-        self.cm = cm
-        self.caps: List[int] = []                       # capacity by id
-        self._ids: Dict[Resource, int] = {}
-        self._edge_res: Dict[Edge, Tuple[Resource, ...]] = {}
-        self._edge_ids: Dict[Edge, Tuple[int, ...]] = {}
-        self._edge_unit_ids: Dict[Edge, FrozenSet[int]] = {}
-        self._edge_cost: Dict[Edge, Tuple[float, float]] = {}
-
-    def intern(self, r: Resource) -> int:
-        rid = self._ids.get(r)
-        if rid is None:
-            rid = self._ids[r] = len(self._ids)
-            self.caps.append(self.cm.capacity(r))
-        return rid
-
-    def num_resources(self) -> int:
-        return len(self.caps)
-
-    def resources(self, e: Edge) -> Tuple[Resource, ...]:
-        rs = self._edge_res.get(e)
-        if rs is None:
-            rs = self._edge_res[e] = self.cm.resources(e)
-        return rs
-
-    def edge_ids(self, e: Edge) -> Tuple[int, ...]:
-        ids = self._edge_ids.get(e)
-        if ids is None:
-            ids = self._edge_ids[e] = tuple(
-                self.intern(r) for r in self.resources(e))
-        return ids
-
-    def edge_unit_ids(self, e: Edge) -> FrozenSet[int]:
-        """Ids of e's capacity-1 resources (the ones that can pairwise
-        conflict; capacity > 1 trunks admit concurrent transfers)."""
-        ids = self._edge_unit_ids.get(e)
-        if ids is None:
-            ids = self._edge_unit_ids[e] = frozenset(
-                rid for rid in self.edge_ids(e) if self.caps[rid] == 1)
-        return ids
-
-    def edge_cost(self, e: Edge) -> Tuple[float, float]:
-        """(latency, bandwidth) of e, cached."""
-        c = self._edge_cost.get(e)
-        if c is None:
-            topo = self.cm.topo
-            c = self._edge_cost[e] = (topo.latency(e), topo.bandwidth(e))
-        return c
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,13 +52,22 @@ class ConflictModel:
     topo: Topology
     mode: str = FULL_DUPLEX
 
-    def index(self) -> ResourceIndex:
-        """The interned-resource cache for this model (built on first use)."""
-        idx = self.__dict__.get("_index")
-        if idx is None:
-            idx = ResourceIndex(self)
-            object.__setattr__(self, "_index", idx)
-        return idx
+    def compiled(self) -> CompiledTopology:
+        """The compiled routing/resource layer for this model, built once on
+        first use (dense resource ids, per-edge id tuples and Hockney
+        constants, next-hop routing — see ``repro.core.routing``)."""
+        ct = self.__dict__.get("_compiled")
+        if ct is None:
+            ct = CompiledTopology(self)
+            object.__setattr__(self, "_compiled", ct)
+        return ct
+
+    def __getstate__(self):
+        """Pickle without the compiled layer; it rebuilds deterministically
+        on first use after load (plan artifacts stay small)."""
+        state = dict(self.__dict__)
+        state.pop("_compiled", None)
+        return state
 
     def resources(self, e: Edge) -> Tuple[Resource, ...]:
         i, j = e
@@ -146,16 +93,16 @@ class ConflictModel:
     def conflict(self, e1: Edge, e2: Edge) -> bool:
         if e1 == e2:
             return True
-        idx = self.index()
-        return not idx.edge_unit_ids(e1).isdisjoint(idx.edge_unit_ids(e2))
+        ct = self.compiled()
+        return not ct.edge_unit_ids(e1).isdisjoint(ct.edge_unit_ids(e2))
 
     def compatible(self, edges: Sequence[Edge]) -> bool:
         """True iff all edges can be active simultaneously (a valid round)."""
-        idx = self.index()
-        caps = idx.caps
+        ct = self.compiled()
+        caps = ct.caps
         count: Dict[int, int] = {}
         for e in edges:
-            for rid in idx.edge_ids(e):
+            for rid in ct.edge_ids(e):
                 c = count.get(rid, 0) + 1
                 if c > caps[rid]:
                     return False
@@ -165,10 +112,10 @@ class ConflictModel:
     def groups(self, edges: Iterable[Edge]) -> List[Tuple[Edge, ...]]:
         """Intersecting edge groups restricted to `edges` (cliques of G_I that
         generate all pairwise conflicts under the resource model)."""
-        idx = self.index()
+        ct = self.compiled()
         by_res: Dict[Resource, List[Edge]] = {}
         for e in edges:
-            for r in idx.resources(e):
+            for r in ct.resources(e):
                 by_res.setdefault(r, []).append(e)
         out, seen = [], set()
         for r, es in sorted(by_res.items(), key=lambda kv: str(kv[0])):
@@ -183,12 +130,12 @@ class ConflictModel:
         edges (with multiplicity across trees) using that resource. A schedule
         shorter than d rounds is impossible; coloring achieves exactly d for
         the bipartite one-port structure."""
-        idx = self.index()
-        caps = idx.caps
+        ct = self.compiled()
+        caps = ct.caps
         count: Dict[int, int] = {}
         for te in trees_edges:
             for e in te:
-                for rid in idx.edge_ids(e):
+                for rid in ct.edge_ids(e):
                     count[rid] = count.get(rid, 0) + 1
         if not count:
             return 0

@@ -1,0 +1,223 @@
+"""Versioned, content-addressed store for BBS plan artifacts.
+
+The paper's "build offline, store cheaply, reuse for any message size" (§2.6)
+makes a plan a first-class artifact. This module gives those artifacts a real
+format and lifecycle, replacing the ad-hoc name-keyed pickles the benchmark
+harness used to drop under ``benchmarks/artifacts/plans/``:
+
+  * **Key** — a plan is addressed by ``PlanKey``: the owning topology's
+    content fingerprint (``repro.core.routing.topology_fingerprint``: nodes,
+    cables, Hockney constants, router attachment), the broadcast root, the
+    conflict-model mode, and the engine ``SCHEMA_VERSION``. The key digest is
+    the file name, so any drift — a re-wired fabric, a different root, new
+    engine semantics — addresses a *different* artifact and can never silently
+    reuse a stale one.
+  * **Payload** — the pickled ``BBSPlan`` together with each candidate's
+    compiled steady-state template (``Pipeline.flat_tasks()`` is materialized
+    before storing), so a loaded plan replays through ``CompiledSim`` without
+    re-deriving the template, plus build metadata (build seconds, creation
+    time).
+  * **Validation** — ``load`` re-derives the expected header from the key and
+    raises ``StalePlanError`` on any mismatch (schema version, fingerprint,
+    root, mode), including artifacts whose *content* disagrees with the name
+    they were stored under. Unreadable or truncated files raise
+    ``StalePlanError`` too, so callers can treat every failure mode as
+    "rebuild".
+
+Bump ``SCHEMA_VERSION`` whenever the semantics or layout of pickled plans
+change (SendTask/Pipeline/FlatTasks fields, simulator event ordering, probe
+procedure, …). See ``docs/plan-artifacts.md`` for the on-disk format note.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+import time
+from typing import Callable, Optional, Tuple
+
+from repro.core.intersection import FULL_DUPLEX
+from repro.core.routing import topology_fingerprint
+from repro.core.topology import Topology
+
+# Engine schema version: the probe procedure, simulator semantics and the
+# pickled plan layout this store was written against. Version history:
+#   1 — PR-1 ad-hoc pickles (implicit, unversioned)
+#   2 — single-probe build_plan, compiled flat-task templates persisted,
+#       picklable hierarchical routes, CompiledTopology routing layer
+SCHEMA_VERSION = 2
+
+_MAGIC = "bbs-plan"
+
+
+class StalePlanError(RuntimeError):
+    """A plan artifact does not match the requesting key: wrong engine schema
+    version, topology fingerprint, root or mode — or the file is unreadable.
+    The artifact must be rebuilt, never deserialized against drifted code."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Content address of one plan artifact."""
+
+    fingerprint: str          # topology_fingerprint(topo)
+    root: int
+    mode: str
+    schema: int = SCHEMA_VERSION
+    topo_name: str = ""       # informational only; not part of the digest
+
+    @classmethod
+    def for_topology(cls, topo: Topology, root: int = 0,
+                     mode: str = FULL_DUPLEX) -> "PlanKey":
+        return cls(fingerprint=topology_fingerprint(topo), root=root,
+                   mode=mode, topo_name=topo.name)
+
+    def digest(self) -> str:
+        h = hashlib.sha256()
+        h.update(repr((_MAGIC, self.schema, self.fingerprint,
+                       self.root, self.mode)).encode())
+        return h.hexdigest()[:24]
+
+    def filename(self) -> str:
+        """Human-readable prefix + content digest."""
+        prefix = self.topo_name or "plan"
+        return f"{prefix}-r{self.root}-{self.mode}-v{self.schema}" \
+               f"-{self.digest()}.pkl"
+
+
+class PlanStore:
+    """Directory-backed artifact store for built broadcast plans.
+
+    ``get_or_build`` is the one entry point the benchmark harness needs:
+    in-memory memo -> on-disk artifact (validated) -> build and persist.
+    """
+
+    def __init__(self, root_dir: str):
+        self.root_dir = root_dir
+        self._memo: dict = {}
+
+    # -- paths ---------------------------------------------------------------
+
+    def path_for(self, key: PlanKey) -> str:
+        return os.path.join(self.root_dir, key.filename())
+
+    # -- load / store --------------------------------------------------------
+
+    def load(self, key: PlanKey) -> Tuple[object, dict]:
+        """Load and validate the artifact for ``key``.
+
+        Returns (plan, meta). Raises ``FileNotFoundError`` when no artifact
+        exists and ``StalePlanError`` when one exists but fails validation.
+        """
+        return self.load_path(self.path_for(key), key)
+
+    @staticmethod
+    def load_path(path: str, key: Optional[PlanKey] = None,
+                  ) -> Tuple[object, dict]:
+        """Load an artifact file, validating its header.
+
+        Always checks the embedded schema version against the running
+        ``SCHEMA_VERSION``; with ``key`` also checks fingerprint, root and
+        mode. Raises ``StalePlanError`` with the exact mismatch."""
+        if not os.path.exists(path):
+            raise FileNotFoundError(path)
+        try:
+            with open(path, "rb") as f:
+                blob = pickle.load(f)
+        except Exception as exc:
+            raise StalePlanError(
+                f"plan artifact {path} is unreadable ({exc!r}); delete and "
+                f"rebuild") from exc
+        if not isinstance(blob, dict) or blob.get("magic") != _MAGIC:
+            raise StalePlanError(
+                f"{path} is not a PlanStore artifact (pre-PlanStore pickle?) "
+                f"— rebuild it through PlanStore.store")
+        header = blob["header"]
+        if header["schema"] != SCHEMA_VERSION:
+            raise StalePlanError(
+                f"{path}: engine schema version {header['schema']} != "
+                f"current {SCHEMA_VERSION}; plans must be rebuilt after "
+                f"engine-schema changes")
+        if key is not None:
+            for field in ("fingerprint", "root", "mode"):
+                want = getattr(key, field)
+                got = header[field]
+                if got != want:
+                    raise StalePlanError(
+                        f"{path}: {field} mismatch — artifact has {got!r}, "
+                        f"requested topology/key has {want!r}; the stored "
+                        f"plan belongs to a different fabric or build and "
+                        f"must not be reused")
+        return blob["plan"], dict(header, **blob.get("meta", {}))
+
+    def store(self, key: PlanKey, plan, build_seconds: float = 0.0) -> str:
+        """Persist ``plan`` under ``key``; returns the artifact path.
+
+        Materializes every candidate's compiled steady-state template
+        (``Pipeline.flat_tasks()``) into the payload so a loaded plan replays
+        through the fast engine without re-deriving it. Write-temp-then-rename
+        so a failed dump never leaves a partial artifact behind."""
+        for cand in getattr(plan, "candidates", ()):
+            cand.pipeline.flat_tasks()
+        blob = {
+            "magic": _MAGIC,
+            "header": {
+                "schema": key.schema,
+                "fingerprint": key.fingerprint,
+                "root": key.root,
+                "mode": key.mode,
+                "topo_name": key.topo_name,
+            },
+            "meta": {
+                "build_seconds": build_seconds,
+                "created": time.time(),
+            },
+            "plan": plan,
+        }
+        payload = pickle.dumps(blob)
+        os.makedirs(self.root_dir, exist_ok=True)
+        path = self.path_for(key)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+        return path
+
+    # -- the benchmark entry point -------------------------------------------
+
+    def get_or_build(self, topo: Topology, root: int = 0,
+                     mode: str = FULL_DUPLEX,
+                     builder: Optional[Callable] = None,
+                     ) -> Tuple[object, float, bool]:
+        """Return (plan, build_seconds, was_cached) for (topo, root, mode).
+
+        Checks the in-memory memo, then the on-disk artifact (validated
+        against the key; stale artifacts are rebuilt and overwritten), and
+        finally builds via ``builder`` (default ``repro.core.bbs.build_plan``)
+        and persists the result."""
+        key = PlanKey.for_topology(topo, root=root, mode=mode)
+        memo_key = key.digest()
+        hit = self._memo.get(memo_key)
+        if hit is not None:
+            return hit[0], hit[1], True
+        try:
+            plan, meta = self.load(key)
+            out = (plan, float(meta.get("build_seconds", 0.0)))
+            self._memo[memo_key] = out
+            return out[0], out[1], True
+        except FileNotFoundError:
+            pass
+        except StalePlanError:
+            # drifted artifact under the same name: rebuild and overwrite
+            pass
+        if builder is None:
+            from repro.core.bbs import build_plan
+            builder = build_plan
+        t0 = time.perf_counter()
+        plan = builder(topo, root=root, mode=mode)
+        build_seconds = time.perf_counter() - t0
+        self.store(key, plan, build_seconds)
+        self._memo[memo_key] = (plan, build_seconds)
+        return plan, build_seconds, False

@@ -1,0 +1,245 @@
+"""Compiled-topology routing layer: one-shot precomputation per fabric.
+
+The paper's "low storage / build offline" property (§2.6) treats topology
+structure as a deterministic, cheap-to-store artifact. This module is where
+that structure gets compiled — once per topology — instead of being recomputed
+all over the stack:
+
+  * ``NextHopTable`` — all-pairs next-hop routing for flat fabrics. One BFS
+    per source builds a dense predecessor matrix; ``path(i, j)`` is then an
+    O(path-length) parent walk with *exactly* the tie-breaking of the previous
+    per-pair BFS (sorted adjacency, first-discovery wins), so routed transfers
+    keep bit-identical costs and link sets. This replaces the
+    ``FlatTopology._path`` 200k-entry ``lru_cache`` hot spot.
+  * ``CompiledTopology`` — the per-(topology, conflict-mode) compiled view
+    consumed by both simulator engines, the routed baselines and the
+    scheduling/coloring layers: dense integer interning of every conflict
+    resource (capacities in a flat list), per-edge resource-id tuples, and
+    per-edge Hockney constants (latency, bandwidth). Candidate edges are
+    compiled eagerly in one shot; routed non-candidate pairs (baselines use
+    arbitrary endpoint pairs) are interned on first use through the same
+    tables. This absorbs the former ``repro.core.intersection.ResourceIndex``.
+  * ``topology_fingerprint`` — a stable content hash of the fabric (nodes,
+    cables/candidate edges, per-edge Hockney constants, router attachment).
+    ``repro.core.planstore`` keys plan artifacts by it so a plan can never be
+    silently replayed against a drifted topology.
+
+Build cost is one BFS sweep + one pass over candidate edges; everything else
+is table lookups.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import TYPE_CHECKING, Dict, FrozenSet, List, Optional, Tuple
+
+import numpy as np
+
+if TYPE_CHECKING:   # import cycle: topology/intersection import this module
+    from repro.core.intersection import ConflictModel
+    from repro.core.topology import Edge, Topology
+
+Resource = Tuple
+
+
+class NextHopTable:
+    """All-pairs shortest-path routing table for a flat fabric.
+
+    Built with one full BFS per source over the (sorted) adjacency lists.
+    ``parent[i, w]`` is the predecessor of ``w`` on the BFS tree rooted at
+    ``i``; ``dist[i, w]`` the hop count. Because a full BFS assigns the same
+    predecessors as an early-stopping BFS for every node it discovers, the
+    reconstructed ``path(i, j)`` is identical to the historical per-pair BFS
+    (deterministic first-discovery tie-break over sorted neighbors).
+    """
+
+    __slots__ = ("n", "parent", "dist")
+
+    def __init__(self, n: int, adj: Dict[int, List[int]]):
+        self.n = n
+        parent = np.full((n, n), -1, dtype=np.int32)
+        dist = np.full((n, n), -1, dtype=np.int32)
+        for i in range(n):
+            prev = parent[i]
+            dd = dist[i]
+            dd[i] = 0
+            seen = bytearray(n)
+            seen[i] = 1
+            frontier = [i]
+            d = 0
+            while frontier:
+                d += 1
+                nxt = []
+                for v in frontier:
+                    for w in adj[v]:
+                        if not seen[w]:
+                            seen[w] = 1
+                            prev[w] = v
+                            dd[w] = d
+                            nxt.append(w)
+                frontier = nxt
+        self.parent = parent
+        self.dist = dist
+
+    def hops(self, i: int, j: int) -> int:
+        """Shortest hop count i -> j (0 for i == j)."""
+        return int(self.dist[i, j])
+
+    def next_hop(self, i: int, j: int) -> int:
+        """First node after ``i`` on the shortest path i -> j."""
+        path = self.path(i, j)
+        return path[1] if len(path) > 1 else j
+
+    def path(self, i: int, j: int) -> Tuple[int, ...]:
+        """Node path i -> j, reconstructed by an O(length) parent walk."""
+        if i == j:
+            return (i,)
+        prev = self.parent[i]
+        out = [j]
+        v = j
+        while v != i:
+            v = int(prev[v])
+            assert v >= 0, f"no route {i} -> {j}"
+            out.append(v)
+        return tuple(reversed(out))
+
+
+def topology_fingerprint(topo: "Topology") -> str:
+    """Stable content hash of a fabric's structure and Hockney constants.
+
+    Covers: class, name, node count, the full cable set (flat fabrics — it
+    governs routing of non-candidate pairs), router attachment (hierarchical
+    fabrics), and per-candidate-edge (latency, bandwidth, link set). Plan
+    artifacts keyed by this hash are invalidated by any topology change that
+    could alter schedules or costs; pure code changes are covered separately
+    by the plan-store schema version.
+    """
+    h = hashlib.sha256()
+
+    def put(obj) -> None:
+        h.update(repr(obj).encode())
+        h.update(b"\x00")
+
+    put((type(topo).__name__, topo.name, topo.num_nodes, topo.hierarchical))
+    cables = getattr(topo, "_edges", None)
+    if cables is not None:
+        put(tuple(cables))
+        put(bool(getattr(topo, "_shared", True)))
+    node_router = getattr(topo, "node_router", None)
+    if node_router is not None:
+        put(tuple(sorted(node_router.items())))
+    for e in topo.candidate_edges:
+        put((e, topo.latency(e), topo.bandwidth(e), topo.links(e)))
+    return h.hexdigest()[:32]
+
+
+class CompiledTopology:
+    """Compiled per-(topology, mode) routing + resource layer.
+
+    One-shot precomputation shared by every consumer of a
+    ``ConflictModel`` — the reference and flat-array simulator engines, the
+    coloring/scheduling layer, ``delta_star`` and the routed baselines:
+
+      * every conflict resource interned to a dense integer id (capacities in
+        ``caps``, a flat list indexed by id);
+      * per-edge resource tuples / id tuples / capacity-1 id sets;
+      * per-edge Hockney constants via ``edge_cost``.
+
+    Candidate edges are compiled eagerly; arbitrary routed pairs (baselines
+    may send between any endpoints) fall into the same tables on first use.
+    Obtain instances via ``ConflictModel.compiled()`` (cached per model).
+    """
+
+    __slots__ = ("cm", "topo", "mode", "caps", "_ids", "_edge_res",
+                 "_edge_ids", "_edge_unit_ids", "_edge_cost", "_fingerprint")
+
+    def __init__(self, cm: "ConflictModel"):
+        self.cm = cm
+        self.topo = cm.topo
+        self.mode = cm.mode
+        self.caps: List[int] = []                       # capacity by id
+        self._ids: Dict[Resource, int] = {}
+        self._edge_res: Dict["Edge", Tuple[Resource, ...]] = {}
+        self._edge_ids: Dict["Edge", Tuple[int, ...]] = {}
+        self._edge_unit_ids: Dict["Edge", FrozenSet[int]] = {}
+        self._edge_cost: Dict["Edge", Tuple[float, float]] = {}
+        self._fingerprint: Optional[str] = None
+        for e in self.topo.candidate_edges:             # one-shot compile
+            self.edge_ids(e)
+            self.edge_cost(e)
+
+    # -- routing -------------------------------------------------------------
+
+    def path(self, i: int, j: int) -> Tuple[int, ...]:
+        """Routed node path i -> j. Flat fabrics: next-hop table walk;
+        hierarchical fabrics route through the NIC/trunk layer, so the
+        endpoint-level path is the direct pair."""
+        table = getattr(self.topo, "next_hop_table", None)
+        if table is not None:
+            return table().path(i, j)
+        return (i, j)
+
+    def hops(self, i: int, j: int) -> int:
+        table = getattr(self.topo, "next_hop_table", None)
+        if table is not None:
+            return table().hops(i, j)
+        return 0 if i == j else 1
+
+    def links(self, e: "Edge") -> Tuple[str, ...]:
+        return self.topo.links(e)
+
+    def fingerprint(self) -> str:
+        """Topology content hash (mode-independent; see PlanKey for mode)."""
+        fp = self._fingerprint
+        if fp is None:
+            fp = self._fingerprint = topology_fingerprint(self.topo)
+        return fp
+
+    # -- resource interning ----------------------------------------------------
+
+    def intern(self, r: Resource) -> int:
+        rid = self._ids.get(r)
+        if rid is None:
+            rid = self._ids[r] = len(self._ids)
+            self.caps.append(self.cm.capacity(r))
+        return rid
+
+    def num_resources(self) -> int:
+        return len(self.caps)
+
+    def resources(self, e: "Edge") -> Tuple[Resource, ...]:
+        rs = self._edge_res.get(e)
+        if rs is None:
+            rs = self._edge_res[e] = self.cm.resources(e)
+        return rs
+
+    def edge_ids(self, e: "Edge") -> Tuple[int, ...]:
+        ids = self._edge_ids.get(e)
+        if ids is None:
+            ids = self._edge_ids[e] = tuple(
+                self.intern(r) for r in self.resources(e))
+        return ids
+
+    def edge_unit_ids(self, e: "Edge") -> FrozenSet[int]:
+        """Ids of e's capacity-1 resources (the ones that can pairwise
+        conflict; capacity > 1 trunks admit concurrent transfers)."""
+        ids = self._edge_unit_ids.get(e)
+        if ids is None:
+            ids = self._edge_unit_ids[e] = frozenset(
+                rid for rid in self.edge_ids(e) if self.caps[rid] == 1)
+        return ids
+
+    # -- Hockney constants -----------------------------------------------------
+
+    def edge_cost(self, e: "Edge") -> Tuple[float, float]:
+        """(latency, bandwidth) of e, precomputed for candidate edges and
+        cached for routed pairs."""
+        c = self._edge_cost.get(e)
+        if c is None:
+            topo = self.topo
+            c = self._edge_cost[e] = (topo.latency(e), topo.bandwidth(e))
+        return c
+
+    def duration(self, e: "Edge", nbytes: float) -> float:
+        lat, bw = self.edge_cost(e)
+        return lat + nbytes / bw

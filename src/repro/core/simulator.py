@@ -103,10 +103,11 @@ class EventSimulator:
         self.topo = topo
         self.cm = cm
         self.root = root
+        self.ct = cm.compiled()   # shared routing / resource / Hockney tables
 
     def run(self, tasks: Sequence[SendTask],
             total_blocks: Optional[int] = None) -> SimResult:
-        topo, cm, root = self.topo, self.cm, self.root
+        topo, cm, root, ct = self.topo, self.cm, self.root, self.ct
         n_tasks = len(tasks)
         order = sorted(range(n_tasks), key=lambda i: tasks[i].priority)
         rank = [0] * n_tasks
@@ -135,7 +136,7 @@ class EventSimulator:
         caps: Dict[Hashable, int] = {}
         res_wait: Dict[Hashable, List[int]] = {}
         ready: List[Tuple[int, int]] = []
-        resources = [cm.resources((t.src, t.dst)) for t in tasks]
+        resources = [ct.resources((t.src, t.dst)) for t in tasks]
         for rs in resources:
             for r in rs:
                 if r not in caps:
@@ -174,8 +175,8 @@ class EventSimulator:
                     continue
                 for r in resources[i]:
                     busy[r] = busy.get(r, 0) + 1
-                dur = topo.latency((t.src, t.dst)) + \
-                    t.nbytes / topo.bandwidth((t.src, t.dst))
+                lat, bw = ct.edge_cost((t.src, t.dst))
+                dur = lat + t.nbytes / bw
                 heapq.heappush(events, (now + dur, seq, i))
                 seq += 1
                 started += 1
@@ -276,13 +277,15 @@ def delta_star(topo: Topology, cm: ConflictModel, pipe: Pipeline,
     once, then the steady-state period is at least the busiest intersecting
     group's total service time: max over resources r of
     sum_{tasks using r} (L_e + P_tree/B_e) / capacity(r)."""
+    ct = cm.compiled()
     load: Dict[Hashable, float] = {}
     caps: Dict[Hashable, int] = {}
     for rnd in pipe.rounds:
         for task in rnd:
             e = task.edge
-            dur = topo.latency(e) + packet_bytes[task.tree] / topo.bandwidth(e)
-            for r in cm.resources(e):
+            lat, bw = ct.edge_cost(e)
+            dur = lat + packet_bytes[task.tree] / bw
+            for r in ct.resources(e):
                 load[r] = load.get(r, 0.0) + dur
                 if r not in caps:
                     caps[r] = cm.capacity(r)

@@ -21,8 +21,9 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from functools import lru_cache
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.routing import NextHopTable
 
 Edge = Tuple[int, int]
 
@@ -123,6 +124,15 @@ class Topology:
                     stack.append(w)
         assert len(seen) == self.num_nodes, f"{self.name}: must be connected"
 
+    def __getstate__(self):
+        """Pickle without derived caches (adjacency maps, next-hop tables);
+        they rebuild lazily on first use after load. Keeps plan artifacts
+        small and immune to cache-layout drift."""
+        state = dict(self.__dict__)
+        for k in ("_adj_maps", "_next_hop_table"):
+            state.pop(k, None)
+        return state
+
 
 # ---------------------------------------------------------------------------
 # Flat topologies (explicit cables)
@@ -136,8 +146,10 @@ class FlatTopology(Topology):
     per-direction channels (shared_cable=False).
 
     Transfers between non-adjacent nodes are routed along BFS shortest paths
-    (cached), occupying every cable on the route — mirroring SimGrid's network
-    model, which baselines like binomial-over-virtual-ranks rely on.
+    from the precompiled all-pairs ``NextHopTable`` (one BFS per source, built
+    once on first routed transfer), occupying every cable on the route —
+    mirroring SimGrid's network model, which baselines like
+    binomial-over-virtual-ranks rely on.
     """
 
     def __init__(self, name: str, n: int, pairs: Sequence[Edge], preset: str,
@@ -175,25 +187,21 @@ class FlatTopology(Topology):
     def candidate_edges(self) -> Tuple[Edge, ...]:
         return self._candidates
 
-    @lru_cache(maxsize=200_000)
-    def _path(self, i: int, j: int) -> Tuple[int, ...]:
-        """BFS shortest node path i -> j (deterministic tie-break by id)."""
+    def next_hop_table(self) -> NextHopTable:
+        """The all-pairs next-hop routing table, compiled on first use (one
+        BFS per source; the per-pair BFS + lru_cache this replaces had the
+        same deterministic tie-break, so paths are unchanged)."""
+        table = self.__dict__.get("_next_hop_table")
+        if table is None:
+            table = self._next_hop_table = NextHopTable(self.num_nodes,
+                                                        self._adj)
+        return table
+
+    def path(self, i: int, j: int) -> Tuple[int, ...]:
+        """Routed node path i -> j (table lookup, O(path length))."""
         if (i, j) in self._edge_set:
             return (i, j)
-        prev = {i: -1}
-        frontier = [i]
-        while frontier and j not in prev:
-            nxt = []
-            for v in frontier:
-                for w in self._adj[v]:
-                    if w not in prev:
-                        prev[w] = v
-                        nxt.append(w)
-            frontier = nxt
-        path = [j]
-        while path[-1] != i:
-            path.append(prev[path[-1]])
-        return tuple(reversed(path))
+        return self.next_hop_table().path(i, j)
 
     def _cable(self, a: int, b: int) -> str:
         if self._shared:
@@ -204,7 +212,7 @@ class FlatTopology(Topology):
     def latency(self, e: Edge) -> float:
         if e in self._edge_set:
             return self._lat
-        return self._lat * (len(self._path(*e)) - 1)
+        return self._lat * self.next_hop_table().hops(*e)
 
     def bandwidth(self, e: Edge) -> float:
         return self._bw
@@ -212,7 +220,7 @@ class FlatTopology(Topology):
     def links(self, e: Edge) -> Tuple[str, ...]:
         if e in self._edge_set:
             return (self._cable(*e),)
-        p = self._path(*e)
+        p = self.path(*e)
         return tuple(self._cable(a, b) for a, b in zip(p, p[1:]))
 
     def connected(self, e: Edge) -> bool:
@@ -398,6 +406,13 @@ class HierTopology(Topology):
         return bw
 
 
+class FatTreeRoute:
+    """Leaf -> core -> leaf route (module-level so plans pickle)."""
+
+    def __call__(self, ra: str, rb: str) -> Tuple[str, ...]:
+        return (f"trunk:{ra}", f"trunk:{rb}")
+
+
 def fat_tree(n: int, radix: int = 16, preset: str = "edr") -> HierTopology:
     """Two-level full-bisection fat-tree: pods of `radix` endpoints, leaf
     switches joined through a core. EDR on all links (paper §3.1)."""
@@ -411,11 +426,40 @@ def fat_tree(n: int, radix: int = 16, preset: str = "edr") -> HierTopology:
         trunk_latency[t] = lat
         trunk_bandwidth[t] = bw * radix   # full bisection
 
-    def route(ra: str, rb: str) -> Tuple[str, ...]:
-        return (f"trunk:{ra}", f"trunk:{rb}")
-
-    return HierTopology(f"fattree_{n}", n, node_router, route,
+    return HierTopology(f"fattree_{n}", n, node_router, FatTreeRoute(),
                         trunk_latency, trunk_bandwidth, preset)
+
+
+class DragonflyRoute:
+    """Minimal dragonfly route: one local or one global trunk per hop.
+
+    Trunk entries materialize in the shared latency/bandwidth dicts on first
+    use (the same dict objects the owning ``HierTopology`` holds, so pickling
+    a topology preserves the sharing). Module-level so plans pickle.
+    """
+
+    def __init__(self, trunk_bw: float,
+                 trunk_latency: Dict[str, float],
+                 trunk_bandwidth: Dict[str, float]):
+        self.trunk_bw = trunk_bw
+        self.trunk_latency = trunk_latency
+        self.trunk_bandwidth = trunk_bandwidth
+
+    def __call__(self, ra: str, rb: str) -> Tuple[str, ...]:
+        ga, gb = ra.split("r")[0], rb.split("r")[0]
+        if ga == gb:
+            lo, hi = sorted((ra, rb))
+            t = f"local:{lo}-{hi}"
+            if t not in self.trunk_latency:
+                self.trunk_latency[t] = 200e-9
+                self.trunk_bandwidth[t] = self.trunk_bw
+            return (t,)
+        lo, hi = sorted((ga, gb))
+        t = f"global:{lo}-{hi}"
+        if t not in self.trunk_latency:
+            self.trunk_latency[t] = 400e-9
+            self.trunk_bandwidth[t] = self.trunk_bw
+        return (t,)
 
 
 def dragonfly(n: int, nodes_per_router: int = 4,
@@ -431,23 +475,8 @@ def dragonfly(n: int, nodes_per_router: int = 4,
     aries_b = LINK_PRESETS["aries"]["bandwidth"]
     trunk_latency: Dict[str, float] = {}
     trunk_bandwidth: Dict[str, float] = {}
-
-    def route(ra: str, rb: str) -> Tuple[str, ...]:
-        ga, gb = ra.split("r")[0], rb.split("r")[0]
-        if ga == gb:
-            lo, hi = sorted((ra, rb))
-            t = f"local:{lo}-{hi}"
-            if t not in trunk_latency:
-                trunk_latency[t] = 200e-9
-                trunk_bandwidth[t] = aries_b * nodes_per_router
-            return (t,)
-        lo, hi = sorted((ga, gb))
-        t = f"global:{lo}-{hi}"
-        if t not in trunk_latency:
-            trunk_latency[t] = 400e-9
-            trunk_bandwidth[t] = aries_b * nodes_per_router
-        return (t,)
-
+    route = DragonflyRoute(aries_b * nodes_per_router,
+                           trunk_latency, trunk_bandwidth)
     return HierTopology(f"dragonfly_{n}", n, node_router, route,
                         trunk_latency, trunk_bandwidth, "aries")
 

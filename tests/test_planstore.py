@@ -1,0 +1,193 @@
+"""PlanStore artifact lifecycle + the single-probe build_plan regression.
+
+A plan artifact is keyed by (topology fingerprint, root, mode, engine schema
+version); anything stale must raise ``StalePlanError`` — never deserialize
+silently against drifted code — and ``get_or_build`` must round-trip plans
+with their compiled steady-state templates intact.
+"""
+
+import os
+import pickle
+
+import pytest
+
+from repro.core import topology as T
+from repro.core.bbs import broadcast_time, build_plan
+from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
+from repro.core import planstore
+from repro.core.planstore import (SCHEMA_VERSION, PlanKey, PlanStore,
+                                  StalePlanError)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return T.mesh2d(4, 8)
+
+
+@pytest.fixture(scope="module")
+def mesh_plan(mesh):
+    return build_plan(mesh, root=0)
+
+
+def test_store_load_round_trip(tmp_path, mesh, mesh_plan):
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    path = store.store(key, mesh_plan, build_seconds=1.25)
+    assert os.path.exists(path)
+    loaded, meta = store.load(key)
+    assert meta["build_seconds"] == 1.25
+    assert meta["schema"] == SCHEMA_VERSION
+    t0, _ = broadcast_time(mesh_plan, 1e6)
+    t1, _ = broadcast_time(loaded, 1e6)
+    assert t0 == t1
+
+
+def test_store_persists_compiled_templates(tmp_path, mesh, mesh_plan):
+    """Candidates ship with their steady-state template materialized, so a
+    loaded plan replays through CompiledSim without re-deriving it."""
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    store.store(key, mesh_plan)
+    loaded, _ = store.load(key)
+    for cand in loaded.candidates:
+        assert "_flat_tasks" in cand.pipeline.__dict__
+
+
+def test_get_or_build_caches(tmp_path, mesh):
+    store = PlanStore(str(tmp_path))
+    plan, build_s, cached = store.get_or_build(mesh, root=0)
+    assert not cached and build_s > 0
+    plan2, build_s2, cached2 = store.get_or_build(mesh, root=0)
+    assert cached2 and plan2 is plan
+    # a fresh store (new process) loads from disk instead of rebuilding
+    store3 = PlanStore(str(tmp_path))
+    plan3, build_s3, cached3 = store3.get_or_build(mesh, root=0)
+    assert cached3
+    assert build_s3 == pytest.approx(build_s)
+    t0, _ = broadcast_time(plan, 4e6)
+    t3, _ = broadcast_time(plan3, 4e6)
+    assert t0 == t3
+
+
+def test_get_or_build_hierarchical_pickles(tmp_path):
+    """Hierarchical fabrics (closure-free routes since this refactor) persist
+    too — PR-1's pickle helper silently skipped them."""
+    topo = T.fat_tree(32, radix=8)
+    store = PlanStore(str(tmp_path))
+    _, _, cached = store.get_or_build(topo, root=0)
+    assert not cached
+    store2 = PlanStore(str(tmp_path))
+    _, _, cached2 = store2.get_or_build(T.fat_tree(32, radix=8), root=0)
+    assert cached2
+
+
+def test_schema_version_mismatch_raises(tmp_path, mesh, mesh_plan):
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    path = store.store(key, mesh_plan)
+    blob = pickle.load(open(path, "rb"))
+    blob["header"]["schema"] = SCHEMA_VERSION + 1
+    pickle.dump(blob, open(path, "wb"))
+    with pytest.raises(StalePlanError, match="schema version"):
+        PlanStore.load_path(path)
+
+
+def test_fingerprint_mismatch_raises(tmp_path, mesh, mesh_plan):
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    path = store.store(key, mesh_plan)
+    other = PlanKey.for_topology(T.ring(16), root=0)
+    with pytest.raises(StalePlanError, match="fingerprint mismatch"):
+        PlanStore.load_path(path, other)
+
+
+def test_root_and_mode_key_separate_artifacts(tmp_path, mesh, mesh_plan):
+    store = PlanStore(str(tmp_path))
+    k0 = PlanKey.for_topology(mesh, root=0)
+    k1 = PlanKey.for_topology(mesh, root=1)
+    k2 = PlanKey.for_topology(mesh, root=0, mode=ALL_PORT)
+    assert len({k0.digest(), k1.digest(), k2.digest()}) == 3
+    path = store.store(k0, mesh_plan)
+    with pytest.raises(StalePlanError, match="root mismatch"):
+        PlanStore.load_path(path, k1)
+    with pytest.raises(StalePlanError, match="mode mismatch"):
+        PlanStore.load_path(path, k2)
+
+
+def test_corrupt_artifact_raises(tmp_path, mesh, mesh_plan):
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    path = store.store(key, mesh_plan)
+    with open(path, "wb") as f:
+        f.write(b"\x80\x04 truncated garbage")
+    with pytest.raises(StalePlanError, match="unreadable"):
+        store.load(key)
+
+
+def test_legacy_raw_pickle_rejected(tmp_path, mesh, mesh_plan):
+    """PR-1 style raw (plan, build_s) pickles are not PlanStore artifacts and
+    must be rejected, not deserialized against drifted code."""
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    path = store.path_for(key)
+    os.makedirs(str(tmp_path), exist_ok=True)
+    with open(path, "wb") as f:
+        pickle.dump((mesh_plan, 0.1), f)
+    with pytest.raises(StalePlanError, match="not a PlanStore artifact"):
+        store.load(key)
+    # get_or_build treats it as stale and rebuilds in place
+    plan, _, cached = store.get_or_build(mesh, root=0)
+    assert not cached
+    loaded, _ = store.load(key)
+    t0, _ = broadcast_time(plan, 1e6)
+    t1, _ = broadcast_time(loaded, 1e6)
+    assert t0 == t1
+
+
+def test_missing_artifact_is_filenotfound(tmp_path, mesh):
+    store = PlanStore(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        store.load(PlanKey.for_topology(mesh, root=0))
+
+
+# ---------------------------------------------------------------------------
+# build_plan single-probe regression (satellite: drop the m=1 simulation)
+# ---------------------------------------------------------------------------
+
+def test_single_probe_parity_with_double_probe(mesh):
+    """One probe simulation per candidate. Δ (=> b_hat) comes from the same
+    run as before — bit-identical to the legacy double-probe path. The m=1
+    fill time is derived from the run's own group-0 prefix: for exactly
+    periodic templates (the chain family) that equals the separate m=1
+    simulation bit for bit; jittery multi-tree candidates absorb steady-state
+    contention into a_hat (a ranking estimate arbitrated by simulation), so
+    parity there is plan-level, checked below."""
+    single = build_plan(mesh, root=0)
+    double = build_plan(mesh, root=0, double_probe=True)
+    by_name_s = {c.name: c for c in single.candidates}
+    by_name_d = {c.name: c for c in double.candidates}
+    assert set(by_name_s) == set(by_name_d)
+    for name in by_name_s:
+        assert by_name_s[name].b_hat == by_name_d[name].b_hat, name
+    assert by_name_s["chain"].a_hat == by_name_d["chain"].a_hat
+
+
+@pytest.mark.parametrize("mk,mode", [
+    (lambda: T.mesh2d(4, 8), FULL_DUPLEX),
+    (lambda: T.ring(8), ALL_PORT),
+    (lambda: T.fat_tree(32, radix=8), FULL_DUPLEX),
+])
+def test_single_probe_plan_level_parity(mk, mode):
+    """The plans a user actually gets: identical candidate sets and, across
+    the message-size regimes, simulated broadcast times within a few percent
+    of the double-probe plans (the closed form only ranks; a short simulation
+    arbitrates)."""
+    topo = mk()
+    single = build_plan(topo, root=0, mode=mode)
+    double = build_plan(topo, root=0, mode=mode, double_probe=True)
+    assert [c.name for c in single.candidates] == \
+        [c.name for c in double.candidates]
+    for M in (64e3, 1e6, 16e6):
+        ts, _ = broadcast_time(single, M)
+        td, _ = broadcast_time(double, M)
+        assert ts <= td * 1.10

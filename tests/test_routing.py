@@ -1,0 +1,241 @@
+"""Compiled-topology routing layer: next-hop tables vs the historical BFS.
+
+The all-pairs ``NextHopTable`` replaced the per-pair BFS + lru_cache in
+``FlatTopology``. Routed transfers (baselines address arbitrary endpoint
+pairs) must keep *bit-identical* paths, latencies and cable sets — proven
+here against a standalone reimplementation of the removed BFS — and the
+routed baselines must replay identically on both simulator engines.
+"""
+
+import pickle
+
+import pytest
+
+from repro.core import arborescence as arb
+from repro.core import topology as T
+from repro.core.baselines import BASELINES, simulate_baseline
+from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
+from repro.core.routing import (CompiledTopology, NextHopTable,
+                                topology_fingerprint)
+from repro.core.schedule import build_pipeline
+
+
+def _bfs_path_reference(topo, i, j):
+    """The removed ``FlatTopology._path`` BFS, verbatim (deterministic
+    first-discovery tie-break over sorted adjacency)."""
+    if (i, j) in topo._edge_set:
+        return (i, j)
+    prev = {i: -1}
+    frontier = [i]
+    while frontier and j not in prev:
+        nxt = []
+        for v in frontier:
+            for w in topo._adj[v]:
+                if w not in prev:
+                    prev[w] = v
+                    nxt.append(w)
+        frontier = nxt
+    path = [j]
+    while path[-1] != i:
+        path.append(prev[path[-1]])
+    return tuple(reversed(path))
+
+
+FLAT_TOPOS = {
+    "mesh2d": lambda: T.mesh2d(4, 8),
+    "butterfly": lambda: T.butterfly(64),
+    "ring": lambda: T.ring(16),
+    "hypercube": lambda: T.hypercube(4),
+    "torus2d": lambda: T.torus2d(4, 4),
+}
+
+
+@pytest.mark.parametrize("name", sorted(FLAT_TOPOS))
+def test_next_hop_paths_match_reference_bfs(name):
+    topo = FLAT_TOPOS[name]()
+    n = topo.num_nodes
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            ref = _bfs_path_reference(topo, i, j)
+            assert topo.path(i, j) == ref
+            assert topo.next_hop_table().hops(i, j) == len(ref) - 1
+
+
+@pytest.mark.parametrize("name", sorted(FLAT_TOPOS))
+def test_routed_costs_match_reference_bfs(name):
+    """latency/links of routed (non-cable) pairs equal the BFS-derived ones
+    bit for bit — these feed every simulated transfer duration."""
+    topo = FLAT_TOPOS[name]()
+    n = topo.num_nodes
+    checked = 0
+    for i in range(n):
+        for j in range(n):
+            if i == j or (i, j) in topo._edge_set:
+                continue
+            p = _bfs_path_reference(topo, i, j)
+            assert topo.latency((i, j)) == topo._lat * (len(p) - 1)
+            assert topo.links((i, j)) == tuple(
+                topo._cable(a, b) for a, b in zip(p, p[1:]))
+            checked += 1
+    assert checked > 0
+
+
+def test_next_hop_first_step():
+    topo = T.mesh2d(4, 8)
+    table = topo.next_hop_table()
+    for (i, j) in ((0, 31), (5, 26), (31, 0)):
+        path = table.path(i, j)
+        assert table.next_hop(i, j) == path[1]
+        # next-hop of an adjacent pair is the destination itself
+    assert table.next_hop(0, 1) == 1
+
+
+def test_next_hop_table_built_once():
+    topo = T.mesh2d(4, 8)
+    t1 = topo.next_hop_table()
+    topo.links((0, 31))
+    assert topo.next_hop_table() is t1
+
+
+@pytest.mark.parametrize("name", ["srda", "glf", "bine"])
+@pytest.mark.parametrize("topo_name", ["butterfly", "fattree"])
+def test_routed_baselines_bit_identical_engines(topo_name, name):
+    """srda/glf/bine on fat-tree and butterfly: identical task lists are
+    generated deterministically, and both engines (reference oracle on
+    resource tuples, fast engine on interned next-hop tables) produce
+    bit-identical finishes and deliveries."""
+    topo = T.butterfly(64) if topo_name == "butterfly" \
+        else T.fat_tree(32, radix=8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    t1 = BASELINES[name](topo, 3, 2.0e6)
+    t2 = BASELINES[name](topo, 3, 2.0e6)
+    assert t1 == t2                       # deterministic task generation
+    ref = simulate_baseline(topo, cm, name, 3, 2.0e6, engine="reference")
+    fast = simulate_baseline(topo, cm, name, 3, 2.0e6, engine="fast")
+    assert fast.finish_time == ref.finish_time
+    assert fast.node_finish == ref.node_finish
+    assert fast.deliveries == ref.deliveries
+    assert (fast.started, fast.completed) == (ref.started, ref.completed)
+
+
+def test_compiled_topology_interning_consistent():
+    topo = T.mesh2d(4, 8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    ct = cm.compiled()
+    assert ct is cm.compiled()            # built once per model
+    # candidate edges were compiled eagerly in one shot
+    for e in topo.candidate_edges:
+        ids = ct.edge_ids(e)
+        rs = ct.resources(e)
+        assert len(ids) == len(rs)
+        for rid, r in zip(ids, rs):
+            assert ct.caps[rid] == cm.capacity(r)
+        assert ct.edge_cost(e) == (topo.latency(e), topo.bandwidth(e))
+    # routed pair interned lazily through the same tables
+    e = (0, 31)
+    assert set(ct.edge_ids(e)) <= set(range(ct.num_resources()))
+    assert ct.path(0, 31) == topo.path(0, 31)
+
+
+def test_compiled_topology_hierarchical_paths_direct():
+    topo = T.fat_tree(32, radix=8)
+    ct = ConflictModel(topo, FULL_DUPLEX).compiled()
+    assert ct.path(0, 17) == (0, 17)      # routed at the NIC/trunk layer
+    assert ct.hops(0, 17) == 1
+    assert ct.links((0, 17)) == topo.links((0, 17))
+
+
+def test_fingerprint_stable_and_discriminating():
+    assert topology_fingerprint(T.mesh2d(4, 8)) == \
+        topology_fingerprint(T.mesh2d(4, 8))
+    assert topology_fingerprint(T.fat_tree(32, radix=8)) == \
+        topology_fingerprint(T.fat_tree(32, radix=8))
+    fps = {topology_fingerprint(t) for t in (
+        T.mesh2d(4, 8), T.mesh2d(8, 4), T.ring(16), T.ring(32),
+        T.fat_tree(32, radix=8), T.fat_tree(32, radix=16), T.dragonfly(32),
+        T.mesh2d(4, 8, preset="edr"))}
+    assert len(fps) == 8                  # all distinct
+
+
+def test_fingerprint_usage_independent():
+    """Lazily-materialized state (dragonfly trunks, next-hop tables) must not
+    leak into the fingerprint."""
+    a = T.dragonfly(32)
+    fp_cold = topology_fingerprint(a)
+    cm = ConflictModel(a, FULL_DUPLEX)
+    simulate_baseline(a, cm, "binomial", 0, 1e6)   # populates trunks lazily
+    assert topology_fingerprint(a) == fp_cold
+    b = T.mesh2d(4, 8)
+    fp_b = topology_fingerprint(b)
+    b.next_hop_table()
+    assert topology_fingerprint(b) == fp_b
+
+
+def test_topology_pickle_drops_caches():
+    topo = T.mesh2d(4, 8)
+    topo.next_hop_table()
+    topo.out_edges(0)
+    clone = pickle.loads(pickle.dumps(topo))
+    assert "_next_hop_table" not in clone.__dict__
+    assert "_adj_maps" not in clone.__dict__
+    assert clone.path(0, 31) == topo.path(0, 31)
+    assert topology_fingerprint(clone) == topology_fingerprint(topo)
+
+
+def test_device_schedule_from_flat_template():
+    """The ppermute lowering consumes the compiled steady-state template;
+    its arrivals must match the recursive parent-walk definition."""
+    from repro.collectives.bbs_collective import make_device_schedule
+
+    topo = T.ring(16)
+    cm = ConflictModel(topo, ALL_PORT)
+    trees = arb.double_chain(topo, 0)
+    for t in trees:
+        t.weight = 0.5
+    pipe = build_pipeline(topo, trees, cm)
+    sched = make_device_schedule(pipe, 16, compiled=cm.compiled())
+
+    # recursive reference (the pre-template implementation)
+    round_of = {}
+    for r, rnd in enumerate(pipe.rounds):
+        for task in rnd:
+            round_of[(task.tree, task.edge)] = r
+    arr, in_round = {}, {}
+    for k, tree in enumerate(pipe.trees):
+        arr[(k, 0)] = 0
+        in_round[(k, 0)] = -1
+
+        def resolve(v, k=k, tree=tree):
+            if (k, v) in arr:
+                return
+            p = tree.parent[v]
+            resolve(p)
+            r_e = round_of[(k, (p, v))]
+            arr[(k, v)] = arr[(k, p)] + (1 if r_e <= in_round[(k, p)] else 0)
+            in_round[(k, v)] = r_e
+
+        for v in tree.parent:
+            resolve(v)
+    assert sched.max_arrival == max(arr.values())
+    K = len(pipe.trees)
+    for r in range(sched.d):
+        for (u, v) in sched.perms[r]:
+            rel = int(sched.recv_rel[r][v])
+            k = rel % K
+            assert rel == k - K * arr[(k, v)]
+
+
+def test_device_schedule_rejects_multihop_edges():
+    from repro.collectives.bbs_collective import make_device_schedule
+
+    topo = T.ring(16)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    # a binomial tree on a ring uses power-of-2 strides: multi-hop edges
+    pipe = build_pipeline(topo, [arb.binomial_arborescence(topo, 0)], cm)
+    with pytest.raises(AssertionError, match="not a physical link"):
+        make_device_schedule(pipe, 16, compiled=cm.compiled())
+    # without the compiled fabric the lowering stays permissive (virtual
+    # topologies / tests drive it with logical pipelines)
+    make_device_schedule(pipe, 16)
