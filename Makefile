@@ -10,7 +10,7 @@ test-fast:       ## skip the slow end-to-end jax tests
 	$(PY) -m pytest -x -q -m "not slow"
 
 bench:           ## full simulator benchmark (mesh2d n=256, acceptance cell)
-	$(PY) -m benchmarks.simbench --min-speedup 5
+	$(PY) -m benchmarks.simbench --min-speedup 5 --min-raw-speedup 2.5
 
 bench-smoke:     ## quick perf-regression smoke on a small topology
 	$(PY) -m benchmarks.simbench --smoke

@@ -62,9 +62,11 @@ def _plan_cached(topo_name: str, n: int, root: int = 0, topo=None):
 def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
     """Paper Tables B1-B8 (mean over sampled roots instead of all n).
 
-    Scales to the full n=128..1024 sweep (``--full``): per-(topology, n,
-    root) plans — including each candidate's compiled steady-state template —
-    come from the PlanStore, so only the first sweep pays the plan builds."""
+    Scales to the full n=128..1024 sweep (``--full``): per-(topology, n)
+    plans come from the PlanStore's *packed* multi-root artifacts (one file
+    per fabric holding every sampled root — the per-root-file blowup of the
+    mean-over-roots tables is gone), so only the first sweep pays the plan
+    builds."""
     from repro.core import topology as T
     from repro.core.baselines import simulate_baseline
     from repro.core.bbs import broadcast_time
@@ -76,6 +78,10 @@ def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
             t_cell = time.time()
             topo = T.by_name(topo_name, n)
             cm = ConflictModel(topo, FULL_DUPLEX)
+            cell_roots = sorted({r % n for r in roots})
+            packed, _, _ = plan_store().get_or_build_packed(topo, cell_roots)
+            for r, plan in packed.items():
+                _PLANS[(topo_name, n, r)] = (plan, 0.0)
             for M in messages:
                 per_algo = {}
                 for algo in ALGOS:

@@ -1,23 +1,27 @@
-"""Simulator-engine microbenchmarks: reference oracle vs flat-array engine.
+"""Simulator-engine microbenchmarks: reference oracle vs round-batched engine.
 
-Three measurements, CSV ``name,value,derived`` on stdout (matching
-benchmarks/run.py conventions):
+Four measurements, CSV ``name,value,derived`` on stdout (matching
+benchmarks/run.py conventions) plus a machine-readable ``BENCH_simbench.json``
+so the perf trajectory is tracked across PRs (uploaded as a CI artifact by
+``bench-smoke``):
 
   raw_run        tasks/sec of EventSimulator.run vs CompiledSim.run on the
-                 *identical* expanded task list (pure event-loop speed)
-  pipeline       end-to-end pipelined broadcast: reference = expand m groups
-                 + simulate; fast = CompiledSim.run_pipeline (steady-state
-                 prefix + analytic Δ extrapolation). Chain pipelines are
-                 exactly periodic, so the extrapolation is exact here and
-                 finish times are asserted equal (rel 1e-9) before the
-                 speedup is reported — the acceptance cell (mesh2d n=256,
-                 16 groups).
+                 *identical* expanded task list (generic task-list loop)
+  raw_pipeline   the raw (non-analytic) pipeline event loop: reference =
+                 expand m groups + simulate; fast = the template core
+                 simulating every group (steady/cycle analytics disabled).
+                 Results are asserted bit-identical before the speedup is
+                 reported — the acceptance cell (mesh2d n=256, 16 groups)
+  pipeline       end-to-end pipelined broadcast with analytics on: the fast
+                 engine simulates a prefix and extrapolates (chain pipelines
+                 are exactly periodic, so the extrapolation is exact here;
+                 asserted rel 1e-9)
+  cycle          the verified occupancy-cycle path on a jittery two_tree
+                 schedule (ring16 all-port): detector must fire and match
+                 the full non-analytic run to 1e-9
   build_plan     wall time of bbs.build_plan per topology with the fast
-                 engine (the end-to-end "plan once offline" cost), plus the
-                 single-probe vs legacy double-probe speedup of the probe
-                 phase (LP excluded; the separate m=1 simulation per
-                 candidate is gone — its time is derived from the compiled
-                 probe run's own group-0 prefix)
+                 engine (the end-to-end "plan once offline" cost; the m=1
+                 fill time now comes from an exact isolated group-0 replay)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.simbench            # full (n=256)
@@ -27,8 +31,12 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+_RECORDS = []
 
 
 def _best_of(fn, repeats: int) -> float:
@@ -40,10 +48,16 @@ def _best_of(fn, repeats: int) -> float:
     return best
 
 
+def _record(name: str, engine: str, topo: str, n: int, groups: int,
+            tasks_per_s: float, speedup: float, **extra) -> None:
+    _RECORDS.append(dict(name=name, engine=engine, topo=topo, n=n,
+                         groups=groups, tasks_per_s=round(tasks_per_s),
+                         speedup=round(speedup, 3), **extra))
+
+
 def bench_engines(topo_name: str, n: int, groups: int, message_bytes: float,
-                  repeats: int) -> float:
-    """Raw-loop and end-to-end pipeline comparison; returns the pipeline
-    speedup (the acceptance number)."""
+                  repeats: int) -> dict:
+    """Raw-loop and pipeline comparisons; returns the speedups by cell."""
     from repro.core import arborescence as arb
     from repro.core import topology as T
     from repro.core.fastsim import CompiledSim
@@ -56,8 +70,9 @@ def bench_engines(topo_name: str, n: int, groups: int, message_bytes: float,
     pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
     packet_bytes = [message_bytes / groups]
     tag = f"{topo_name}_{n}_m{groups}"
+    out = {}
 
-    # -- raw event loop on identical tasks -----------------------------------
+    # -- raw event loop on identical generic task lists ----------------------
     tasks = pipeline_tasks(pipe, packet_bytes, groups)
     ref_sim = EventSimulator(topo, cm, 0)
     fast_sim = CompiledSim(topo, cm, 0)
@@ -69,63 +84,116 @@ def bench_engines(topo_name: str, n: int, groups: int, message_bytes: float,
     print(f"raw_run_fast_{tag},{t_fast * 1e6:.0f},"
           f"{len(tasks) / t_fast:.0f} tasks/s")
     print(f"raw_run_speedup_{tag},{t_ref / t_fast:.2f},x")
+    _record("raw_run", "reference", topo_name, n, groups,
+            len(tasks) / t_ref, 1.0)
+    _record("raw_run", "fast", topo_name, n, groups,
+            len(tasks) / t_fast, t_ref / t_fast)
+    out["raw_run"] = t_ref / t_fast
 
-    # -- end-to-end pipelined broadcast (incl. task expansion) ---------------
-    ref_finish = [0.0]
+    # -- raw (non-analytic) pipeline event loop ------------------------------
+    ref_full = ref_sim.run(pipeline_tasks(pipe, packet_bytes, groups),
+                           total_blocks=groups)
+    full_run = fast_sim.run_pipeline(pipe, packet_bytes, groups,
+                                     max_sim_groups=None)
+    assert full_run.res.finish_time == ref_full.finish_time \
+        and full_run.res.deliveries == ref_full.deliveries \
+        and full_run.res.node_finish == ref_full.node_finish, \
+        "raw pipeline loop diverged from the reference oracle"
 
     def ref_e2e():
-        res = ref_sim.run(pipeline_tasks(pipe, packet_bytes, groups),
-                          total_blocks=groups)
-        ref_finish[0] = res.finish_time
+        ref_sim.run(pipeline_tasks(pipe, packet_bytes, groups),
+                    total_blocks=groups)
 
+    t_ref = _best_of(ref_e2e, repeats)
+    t_fast = _best_of(lambda: fast_sim.run_pipeline(
+        pipe, packet_bytes, groups, max_sim_groups=None), repeats)
+    raw_speedup = t_ref / t_fast
+    ntask = groups * len(pipe.flat_tasks())
+    print(f"raw_pipeline_reference_{tag},{t_ref * 1e6:.0f},"
+          f"{ntask / t_ref:.0f} tasks/s")
+    print(f"raw_pipeline_fast_{tag},{t_fast * 1e6:.0f},"
+          f"{ntask / t_fast:.0f} tasks/s (bit-identical full sim)")
+    print(f"raw_pipeline_speedup_{tag},{raw_speedup:.2f},x")
+    _record("raw_pipeline", "reference", topo_name, n, groups,
+            ntask / t_ref, 1.0)
+    _record("raw_pipeline", "fast", topo_name, n, groups,
+            ntask / t_fast, raw_speedup)
+    out["raw_pipeline"] = raw_speedup
+
+    # -- end-to-end pipelined broadcast (analytics on) -----------------------
     fast_run = [None]
 
     def fast_e2e():
         fast_run[0] = fast_sim.run_pipeline(pipe, packet_bytes, groups,
                                             max_sim_groups=6)
 
-    t_ref = _best_of(ref_e2e, repeats)
     t_fast = _best_of(fast_e2e, repeats)
     run = fast_run[0]
-    err = abs(run.res.finish_time - ref_finish[0]) / ref_finish[0]
+    err = abs(run.res.finish_time - ref_full.finish_time) \
+        / ref_full.finish_time
     assert err < 1e-9, f"engines disagree: rel err {err:.2e}"
     speedup = t_ref / t_fast
-    print(f"pipeline_reference_{tag},{t_ref * 1e6:.0f},us")
     print(f"pipeline_fast_{tag},{t_fast * 1e6:.0f},"
           f"steady={run.steady} sim_groups={run.sim_groups}")
     print(f"pipeline_speedup_{tag},{speedup:.2f},x (finish rel err {err:.1e})")
-    return speedup
+    _record("pipeline", "fast", topo_name, n, groups, ntask / t_fast,
+            speedup, steady=run.steady, finish_rel_err=err)
+    out["pipeline"] = speedup
+    return out
 
 
-def bench_build_plan(topo_name: str, n: int, repeats: int = 3) -> None:
+def bench_cycle(repeats: int) -> None:
+    """Verified occupancy-cycle path on a jittery schedule (two_tree on the
+    all-port ring16): the detector must fire and match the full run."""
+    from repro.core import arborescence as arb
+    from repro.core import topology as T
+    from repro.core.fastsim import CompiledSim
+    from repro.core.intersection import ALL_PORT, ConflictModel
+    from repro.core.schedule import build_pipeline
+
+    topo = T.ring(16)
+    cm = ConflictModel(topo, ALL_PORT)
+    pipe = build_pipeline(topo, arb.two_tree(topo, 0), cm)
+    packet_bytes = [2e5 * t.weight for t in pipe.trees]
+    m = 1000
+    sim = CompiledSim(topo, cm, 0)
+    full = sim.run_pipeline(pipe, packet_bytes, m, max_sim_groups=None)
+    run = sim.run_pipeline(pipe, packet_bytes, m, max_sim_groups=6,
+                           cycle_scan_groups=192)
+    assert run.cycle is not None and run.cycle.verified, \
+        "occupancy-cycle detector failed to fire on ring16 two_tree"
+    err = abs(run.res.finish_time - full.res.finish_time) \
+        / full.res.finish_time
+    assert err < 1e-9, f"cycle path inexact: rel err {err:.2e}"
+    t_full = _best_of(lambda: sim.run_pipeline(
+        pipe, packet_bytes, m, max_sim_groups=None), repeats)
+    t_cycle = _best_of(lambda: sim.run_pipeline(
+        pipe, packet_bytes, m, max_sim_groups=6, cycle_scan_groups=192),
+        repeats)
+    ntask = m * len(pipe.flat_tasks())
+    print(f"cycle_full_ring16_m{m},{t_full * 1e6:.0f},us")
+    print(f"cycle_analytic_ring16_m{m},{t_cycle * 1e6:.0f},"
+          f"p={run.cycle.period} start={run.cycle.start} rel_err={err:.1e}")
+    print(f"cycle_speedup_ring16_m{m},{t_full / t_cycle:.2f},x")
+    _record("cycle", "fast", "ring", 16, m, ntask / t_cycle,
+            t_full / t_cycle, period=run.cycle.period,
+            finish_rel_err=err)
+
+
+def bench_build_plan(topo_name: str, n: int) -> None:
     from repro.core import topology as T
     from repro.core.bbs import build_plan
-    from repro.core.intersection import FULL_DUPLEX, ConflictModel
-    from repro.core.lp import solve_saturation_lp
 
     topo = T.by_name(topo_name, n)
     t0 = time.perf_counter()
     plan = build_plan(topo, root=0)
     dt = time.perf_counter() - t0
+    hints = sum(1 for c in plan.candidates if c.cycle is not None)
     print(f"build_plan_{topo_name}_{n},{dt * 1e6:.0f},"
-          f"{len(plan.candidates)} candidates")
-
-    # single-probe vs legacy double-probe build (end-to-end minus the shared
-    # LP solve — tree construction and coloring are identical in both, so
-    # this bounds the probe-restructure gain from below; caches warm from
-    # the build above)
-    cm = ConflictModel(topo, FULL_DUPLEX)
-    sol = solve_saturation_lp(topo, cm, 0)
-    t_single = _best_of(lambda: build_plan(topo, root=0, lp_solution=sol),
-                        repeats)
-    t_double = _best_of(lambda: build_plan(topo, root=0, lp_solution=sol,
-                                           double_probe=True), repeats)
-    print(f"build_plan_noLP_single_probe_{topo_name}_{n},"
-          f"{t_single * 1e6:.0f},us")
-    print(f"build_plan_noLP_double_probe_{topo_name}_{n},"
-          f"{t_double * 1e6:.0f},us")
-    print(f"build_plan_noLP_speedup_{topo_name}_{n},"
-          f"{t_double / t_single:.2f},x (single- vs double-probe, excl LP)")
+          f"{len(plan.candidates)} candidates; {hints} cycle hints")
+    _record("build_plan", "fast", topo_name, n, 0, 0.0, 1.0,
+            seconds=round(dt, 4), candidates=len(plan.candidates),
+            cycle_hints=hints)
 
 
 def main(argv=None) -> int:
@@ -139,17 +207,38 @@ def main(argv=None) -> int:
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="exit nonzero if the pipeline speedup is below this")
+    ap.add_argument("--min-raw-speedup", type=float, default=None,
+                    help="exit nonzero if the raw non-analytic pipeline "
+                         "loop speedup (vs the reference oracle) is below")
+    ap.add_argument("--json", default="BENCH_simbench.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
 
     n = args.n or (64 if args.smoke else 256)
-    speedup = bench_engines(args.topo, n, args.groups, args.message,
-                            args.repeats)
+    speedups = bench_engines(args.topo, n, args.groups, args.message,
+                             args.repeats)
+    bench_cycle(args.repeats)
     bench_build_plan(args.topo, 64 if args.smoke else 128)
-    if args.min_speedup is not None and speedup < args.min_speedup:
-        print(f"FAIL: pipeline speedup {speedup:.2f}x "
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "simbench",
+                       "smoke": bool(args.smoke),
+                       "created": time.time(),
+                       "records": _RECORDS}, f, indent=1)
+        print(f"# wrote {os.path.abspath(args.json)}", file=sys.stderr)
+    ok = True
+    if args.min_speedup is not None and \
+            speedups["pipeline"] < args.min_speedup:
+        print(f"FAIL: pipeline speedup {speedups['pipeline']:.2f}x "
               f"< floor {args.min_speedup}x", file=sys.stderr)
-        return 1
-    return 0
+        ok = False
+    if args.min_raw_speedup is not None and \
+            speedups["raw_pipeline"] < args.min_raw_speedup:
+        print(f"FAIL: raw pipeline loop speedup "
+              f"{speedups['raw_pipeline']:.2f}x "
+              f"< floor {args.min_raw_speedup}x", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

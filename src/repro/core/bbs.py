@@ -31,6 +31,7 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import arborescence as arb
+from repro.core.fastsim import CompiledSim, CycleInfo
 from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
 from repro.core.lp import SaturationSolution, solve_saturation_lp
 from repro.core.schedule import Pipeline, build_pipeline
@@ -46,6 +47,10 @@ class Candidate:
     pipeline: Pipeline
     a_hat: float
     b_hat: float
+    # occupancy-cycle scan hint recorded at build time (probe packet sizes):
+    # lets simulate_pipeline skip the cycle scan and go straight to
+    # verification; None when the bounded scan found no recurrence
+    cycle: Optional[CycleInfo] = None
 
     @property
     def min_lambda(self) -> float:
@@ -124,21 +129,36 @@ def _candidate_trees(topo: Topology, sol: SaturationSolution, root: int,
 def build_plan(topo: Topology, root: int = 0, mode: str = FULL_DUPLEX,
                lp_solution: Optional[SaturationSolution] = None,
                probe_groups: int = 4, engine: str = DEFAULT_ENGINE,
-               double_probe: bool = False) -> BBSPlan:
+               cycle_scan: int = 64,
+               cm: Optional[ConflictModel] = None) -> BBSPlan:
     """Build the once-per-(topology, root, mode) BBS plan.
 
-    Each candidate pipeline is probed with a *single* ``probe_groups``-group
-    simulation: Δ comes from the last two group finishes and the m=1 fill
-    time T(1) from the run's own prefix — group 0's completion time
-    (``group_finish[0]``). Group-0 tasks outrank all later groups, so for
-    exactly periodic templates (the chain families) this equals a separate
-    m=1 simulation bit for bit; for jittery multi-tree schedules it folds in
-    the same steady-state contention the Thm-2 extrapolation sees, which is
-    the regime Eq. 4 ranks anyway. ``double_probe=True`` restores the legacy
-    two-simulation probe (kept for regression tests and the simbench
-    plan-build speedup measurement).
+    Each candidate pipeline is probed with a ``probe_groups``-group
+    simulation: Δ comes from the last two group finishes. The m=1 fill time
+    T(1) comes from an *isolated group-0 replay* on the compiled template —
+    one extra T-task event-loop pass on an empty fabric, bit-identical to a
+    separate m=1 simulation, so ``a_hat`` is exact even for jittery
+    multi-tree schedules (whose group-0 prefix inside the probe run absorbs
+    steady-state contention; that PR-2 shortcut drifted plans by ~6% and is
+    gone). Both probe simulations are complete runs, so plans are
+    bit-identical across engines (regression-tested).
+
+    With the fast engine, each candidate's template is additionally scanned
+    (bounded by ``cycle_scan`` groups, tapered by template size; 0 disables)
+    for an occupancy-cycle recurrence at the probe packet sizes; the hint is
+    recorded on the ``Candidate`` so later ``broadcast_time`` calls skip the
+    scan and go straight to cycle verification.
+
+    ``cm`` lets multi-root builders (``PlanStore.get_or_build_packed``) share
+    one ``ConflictModel`` — and with it the compiled routing layer and the
+    pickle object graph — across every root's plan.
     """
-    cm = ConflictModel(topo, mode)
+    if cm is None:
+        cm = ConflictModel(topo, mode)
+    elif cm.topo is not topo or cm.mode != mode:
+        raise ValueError(
+            f"shared ConflictModel is for ({cm.topo.name!r}, {cm.mode!r}), "
+            f"not ({topo.name!r}, {mode!r})")
     sol = lp_solution or solve_saturation_lp(topo, cm, root)
     D = topo.max_latency_bandwidth_product()
     L = min(topo.latency(e) for e in topo.candidate_edges)
@@ -155,16 +175,30 @@ def build_plan(topo: Topology, root: int = 0, mode: str = FULL_DUPLEX,
         t_m, res, delta = simulate_pipeline(topo, cm, pipe, msg, probe_groups,
                                             root, max_sim_groups=probe_groups,
                                             engine=engine)
-        if double_probe:
-            t1, _, _ = simulate_pipeline(topo, cm, pipe, group_bytes, 1, root,
-                                         engine=engine)
-        else:
-            t1 = res.group_finish[0]   # prefix of the same compiled run
+        # exact T(1): an isolated one-group run, replayed straight from the
+        # compiled template under the fast engine
+        t1, _, _ = simulate_pipeline(topo, cm, pipe, group_bytes, 1, root,
+                                     engine=engine)
+        cyc = None
+        gf = res.group_finish
+        probe_steady = len(gf) >= 3 and \
+            abs((gf[-1] - gf[-2]) - (gf[-2] - gf[-3])) <= 1e-9 * abs(gf[-1])
+        if engine == "fast" and cycle_scan > 0 and not probe_steady:
+            # scan only jittery candidates: pattern-periodic ones (the chain
+            # family) take the prefix-steady path at run time and never
+            # consult the hint
+            T = len(pipe.flat_tasks())
+            budget = min(cycle_scan,
+                         max(3 * probe_groups, 4000 // max(T, 1)))
+            packet_bytes = [group_bytes * t.weight for t in pipe.trees]
+            cyc = CompiledSim(topo, cm, root).scan_cycle(
+                pipe, packet_bytes, budget)
         tau = L + group_bytes * min_lambda / B
         delta = max(delta, 1e-15)
         a = max(t1 - delta, 0.0)
         candidates.append(Candidate(name=name, pipeline=pipe,
-                                    a_hat=a / tau, b_hat=delta / tau))
+                                    a_hat=a / tau, b_hat=delta / tau,
+                                    cycle=cyc))
     return BBSPlan(topo=topo, cm=cm, root=root, lp=sol,
                    candidates=candidates, L=L, B=B)
 
@@ -200,7 +234,8 @@ def broadcast_time(plan: BBSPlan, message_bytes: float,
             m = num_groups
         total, res, delta = simulate_pipeline(
             plan.topo, plan.cm, cand.pipeline, message_bytes, m, plan.root,
-            max_sim_groups=max_sim_groups, engine=engine)
+            max_sim_groups=max_sim_groups, engine=engine,
+            cycle_hint=getattr(cand, "cycle", None))
         results.append((total, cand, m, delta))
     total, cand, m, delta = min(results, key=lambda r: r[0])
     info = dict(num_groups=m, strategy=cand.name,

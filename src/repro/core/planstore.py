@@ -33,10 +33,11 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import inspect
 import os
 import pickle
 import time
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 from repro.core.intersection import FULL_DUPLEX
 from repro.core.routing import topology_fingerprint
@@ -47,15 +48,53 @@ from repro.core.topology import Topology
 #   1 — PR-1 ad-hoc pickles (implicit, unversioned)
 #   2 — single-probe build_plan, compiled flat-task templates persisted,
 #       picklable hierarchical routes, CompiledTopology routing layer
-SCHEMA_VERSION = 2
+#   3 — round-batched engine: Candidate records the occupancy-cycle scan
+#       hint (``repro.core.fastsim.CycleInfo``), exact isolated group-0
+#       probe replay, packed multi-root artifacts
+SCHEMA_VERSION = 3
 
 _MAGIC = "bbs-plan"
+_MAGIC_PACKED = "bbs-plan-pack"
 
 
 class StalePlanError(RuntimeError):
     """A plan artifact does not match the requesting key: wrong engine schema
     version, topology fingerprint, root or mode — or the file is unreadable.
     The artifact must be rebuilt, never deserialized against drifted code."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedPlanKey:
+    """Content address of one *packed* multi-root plan artifact.
+
+    One file per (topology fingerprint, mode, schema) holding every built
+    root's plan. The paper's mean-over-all-roots tables at n=1024 mean ~1k
+    per-root artifacts per fabric; packing collapses them into one file
+    whose shared object graph (topology, conflict model, routing tables) is
+    pickled once instead of per root.
+    """
+
+    fingerprint: str
+    mode: str
+    schema: int = SCHEMA_VERSION
+    topo_name: str = ""       # informational only; not part of the digest
+
+    @classmethod
+    def for_topology(cls, topo: Topology,
+                     mode: str = FULL_DUPLEX) -> "PackedPlanKey":
+        return cls(fingerprint=topology_fingerprint(topo), mode=mode,
+                   topo_name=topo.name)
+
+    def digest(self) -> str:
+        h = hashlib.sha256()
+        h.update(repr((_MAGIC_PACKED, self.schema, self.fingerprint,
+                       self.mode)).encode())
+        return h.hexdigest()[:24]
+
+    def filename(self) -> str:
+        prefix = self.topo_name or "plan"
+        return f"{prefix}-multiroot-{self.mode}-v{self.schema}" \
+               f"-{self.digest()}.pkl"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,12 +194,14 @@ class PlanStore:
     def store(self, key: PlanKey, plan, build_seconds: float = 0.0) -> str:
         """Persist ``plan`` under ``key``; returns the artifact path.
 
-        Materializes every candidate's compiled steady-state template
-        (``Pipeline.flat_tasks()``) into the payload so a loaded plan replays
-        through the fast engine without re-deriving it. Write-temp-then-rename
-        so a failed dump never leaves a partial artifact behind."""
-        for cand in getattr(plan, "candidates", ()):
-            cand.pipeline.flat_tasks()
+        Materializes every candidate's steady-state template
+        (``Pipeline.flat_tasks()``) into the payload so a loaded plan
+        replays through the batched engine without re-deriving it (the
+        lowered ``CompiledTemplate`` is *not* persisted: it rebuilds in
+        O(T) on first use, far below its on-disk numpy footprint — plans
+        stay "cheap to store"). Write-temp-then-rename so a failed dump
+        never leaves a partial artifact behind."""
+        _materialize(plan)
         blob = {
             "magic": _MAGIC,
             "header": {
@@ -221,3 +262,139 @@ class PlanStore:
         self.store(key, plan, build_seconds)
         self._memo[memo_key] = (plan, build_seconds)
         return plan, build_seconds, False
+
+    # -- packed multi-root artifacts -----------------------------------------
+
+    def path_for_packed(self, key: PackedPlanKey) -> str:
+        return os.path.join(self.root_dir, key.filename())
+
+    def store_packed(self, key: PackedPlanKey, plans: dict,
+                     build_seconds: float = 0.0) -> str:
+        """Persist ``plans`` (root -> BBSPlan) as one packed artifact.
+
+        All plans must belong to the keyed fabric/mode; the shared object
+        graph (topology, conflict model, templates) is pickled once for the
+        whole file."""
+        for plan in plans.values():
+            _materialize(plan)
+        blob = {
+            "magic": _MAGIC_PACKED,
+            "header": {
+                "schema": key.schema,
+                "fingerprint": key.fingerprint,
+                "mode": key.mode,
+                "topo_name": key.topo_name,
+                "roots": sorted(plans),
+            },
+            "meta": {
+                "build_seconds": build_seconds,
+                "created": time.time(),
+            },
+            "plans": dict(plans),
+        }
+        payload = pickle.dumps(blob)
+        os.makedirs(self.root_dir, exist_ok=True)
+        path = self.path_for_packed(key)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+        return path
+
+    def load_packed(self, key: PackedPlanKey) -> Tuple[dict, dict]:
+        """Load and validate the packed artifact for ``key``.
+
+        Returns (plans-by-root, meta). Raises ``FileNotFoundError`` when no
+        artifact exists and ``StalePlanError`` when one exists but fails
+        validation (same rules as per-root artifacts)."""
+        path = self.path_for_packed(key)
+        if not os.path.exists(path):
+            raise FileNotFoundError(path)
+        try:
+            with open(path, "rb") as f:
+                blob = pickle.load(f)
+        except Exception as exc:
+            raise StalePlanError(
+                f"packed plan artifact {path} is unreadable ({exc!r}); "
+                f"delete and rebuild") from exc
+        if not isinstance(blob, dict) or blob.get("magic") != _MAGIC_PACKED:
+            raise StalePlanError(
+                f"{path} is not a packed PlanStore artifact — rebuild it "
+                f"through PlanStore.store_packed")
+        header = blob["header"]
+        if header["schema"] != SCHEMA_VERSION:
+            raise StalePlanError(
+                f"{path}: engine schema version {header['schema']} != "
+                f"current {SCHEMA_VERSION}; plans must be rebuilt after "
+                f"engine-schema changes")
+        for field in ("fingerprint", "mode"):
+            want = getattr(key, field)
+            got = header[field]
+            if got != want:
+                raise StalePlanError(
+                    f"{path}: {field} mismatch — artifact has {got!r}, "
+                    f"requested topology/key has {want!r}; the stored plans "
+                    f"belong to a different fabric or build and must not be "
+                    f"reused")
+        return blob["plans"], dict(header, **blob.get("meta", {}))
+
+    def get_or_build_packed(self, topo: Topology, roots: Sequence[int],
+                            mode: str = FULL_DUPLEX,
+                            builder: Optional[Callable] = None,
+                            ) -> Tuple[dict, float, int]:
+        """Return (plans-by-root for ``roots``, build_seconds, cached_count).
+
+        Loads the fabric's packed artifact when valid, builds only the
+        missing roots (one shared ``ConflictModel`` across all of them, so
+        the artifact's object graph is deduplicated), and re-stores the
+        artifact when it grew. Stale or unreadable artifacts are rebuilt in
+        place like per-root ones."""
+        key = PackedPlanKey.for_topology(topo, mode=mode)
+        memo_key = key.digest()
+        plans, build_s = self._memo.get(memo_key, ({}, 0.0))
+        if not plans:
+            try:
+                plans, meta = self.load_packed(key)
+                build_s = float(meta.get("build_seconds", 0.0))
+            except (FileNotFoundError, StalePlanError):
+                plans = {}
+        cached = sum(1 for r in roots if r in plans)
+        missing = [r for r in roots if r not in plans]
+        if missing:
+            if builder is None:
+                from repro.core.bbs import build_plan
+                builder = build_plan
+            # build against the artifact's existing object graph (topology +
+            # ConflictModel of an already-loaded plan) so incremental root
+            # additions keep one shared graph in the pickle instead of
+            # accreting a fresh copy per store cycle
+            first = next(iter(plans.values()), None)
+            if first is not None:
+                topo_b, cm = first.topo, first.cm
+            else:
+                from repro.core.intersection import ConflictModel
+                topo_b, cm = topo, ConflictModel(topo, mode)
+            takes_cm = False
+            try:
+                takes_cm = "cm" in inspect.signature(builder).parameters
+            except (TypeError, ValueError):
+                pass
+            t0 = time.perf_counter()
+            for r in missing:
+                if takes_cm:
+                    plans[r] = builder(topo_b, root=r, mode=mode, cm=cm)
+                else:
+                    plans[r] = builder(topo_b, root=r, mode=mode)
+            build_s += time.perf_counter() - t0
+            self.store_packed(key, plans, build_s)
+        self._memo[memo_key] = (plans, build_s)
+        return {r: plans[r] for r in roots}, build_s, cached
+
+
+def _materialize(plan) -> None:
+    """Materialize every candidate's flat-task template before pickling; the
+    lowered ``CompiledTemplate`` intentionally rebuilds lazily after load
+    (O(T), cheaper than shipping its numpy arrays in every artifact)."""
+    for cand in getattr(plan, "candidates", ()):
+        cand.pipeline.flat_tasks()
+        cand.pipeline.__dict__.pop("_compiled_template", None)

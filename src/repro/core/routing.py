@@ -19,6 +19,14 @@ all over the stack:
     compiled eagerly in one shot; routed non-candidate pairs (baselines use
     arbitrary endpoint pairs) are interned on first use through the same
     tables. This absorbs the former ``repro.core.intersection.ResourceIndex``.
+  * ``CompiledTemplate`` — one pipeline group's task template
+    (``Pipeline.flat_tasks()``) lowered once onto the compiled resource layer:
+    per-task resource-id CSR, intra-group dependency CSR (children lists),
+    admission ranks, and the per-task Hockney constants as numpy vectors so
+    per-packet durations are one vectorized expression. The flat-array engine
+    (``repro.core.fastsim``) replays any number of pipeline groups straight
+    from this template — task ``g*T + t`` is template task ``t`` of group
+    ``g`` — without materializing per-group Python task objects.
   * ``topology_fingerprint`` — a stable content hash of the fabric (nodes,
     cables/candidate edges, per-edge Hockney constants, router attachment).
     ``repro.core.planstore`` keys plan artifacts by it so a plan can never be
@@ -37,6 +45,7 @@ import numpy as np
 
 if TYPE_CHECKING:   # import cycle: topology/intersection import this module
     from repro.core.intersection import ConflictModel
+    from repro.core.schedule import FlatTasks
     from repro.core.topology import Edge, Topology
 
 Resource = Tuple
@@ -243,3 +252,94 @@ class CompiledTopology:
     def duration(self, e: "Edge", nbytes: float) -> float:
         lat, bw = self.edge_cost(e)
         return lat + nbytes / bw
+
+    # -- template lowering -----------------------------------------------------
+
+    def lower_template(self, ft: "FlatTasks") -> "CompiledTemplate":
+        """Lower one pipeline group's flat-task template onto this compiled
+        resource layer (see ``CompiledTemplate``). Pure tables; the result is
+        reusable for any packet size and any number of groups."""
+        return CompiledTemplate(self, ft)
+
+
+class CompiledTemplate:
+    """One pipeline group lowered to flat arrays on a ``CompiledTopology``.
+
+    The batched engine expands ``m`` groups of this template arithmetically —
+    task ``i`` is template task ``i % T`` of group ``i // T`` — so the per-run
+    setup is O(T), not O(m*T) Python object work:
+
+      * ``res_ids`` — per-task dense resource-id tuples (scalar admission
+        path) plus the same ids in CSR form (``res_indptr``/``res_flat``,
+        numpy) for vectorized occupancy counting over a whole frontier;
+      * ``dep``/``children``/``dep_n`` — the intra-group dependency CSR
+        (``pipeline_tasks`` never links across groups: later groups couple
+        only through resources);
+      * ``rank`` — the admission priority of each template task inside its
+        group (global rank of task ``g*T + t`` is ``g*T + rank[t]``),
+        matching the reference engine's (group, round, depth) sort exactly;
+      * ``lat``/``bw`` — per-task Hockney constants, so
+        ``durations(packet_bytes)`` is one vectorized expression with the
+        exact IEEE semantics of the scalar reference (``lat + nbytes / bw``).
+
+    Holds no reference back to the ``CompiledTopology`` it was lowered on:
+    resource interning is deterministic (candidate edges one-shot, then
+    first-use order), so a template pickled inside a plan artifact stays
+    valid against the compiled layer rebuilt after load.
+
+    __slots__ + plain arrays keep it compact and picklable.
+    """
+
+    __slots__ = ("T", "src", "dst", "tree", "rank", "order",
+                 "res_ids", "res_indptr", "res_flat", "dep", "dep_n",
+                 "children", "lat", "bw")
+
+    def __init__(self, ct: CompiledTopology, ft: "FlatTasks"):
+        T = self.T = len(ft)
+        self.src = list(ft.src)
+        self.dst = list(ft.dst)
+        self.tree = list(ft.tree)
+        # reference admission order: (round, depth) stable sort == the
+        # (group, round, depth) priority of simulator.pipeline_tasks per group
+        order = sorted(range(T), key=lambda i: (ft.round_ix[i], ft.depth[i]))
+        self.order = order
+        rank = [0] * T
+        for pos, t in enumerate(order):
+            rank[t] = pos
+        self.rank = rank
+        self.res_ids = [ct.edge_ids((u, v)) for u, v in zip(ft.src, ft.dst)]
+        indptr = np.zeros(T + 1, dtype=np.int64)
+        for i, ids in enumerate(self.res_ids):
+            indptr[i + 1] = indptr[i] + len(ids)
+        self.res_indptr = indptr
+        self.res_flat = np.fromiter(
+            (r for ids in self.res_ids for r in ids), dtype=np.int64,
+            count=int(indptr[-1]))
+        self.dep = list(ft.dep)
+        dep_n = [0] * T
+        children: List[List[int]] = [[] for _ in range(T)]
+        for i, d in enumerate(self.dep):
+            if d >= 0:
+                dep_n[i] = 1
+                children[d].append(i)
+        self.dep_n = dep_n
+        self.children = [tuple(c) for c in children]
+        lat = np.empty(T)
+        bw = np.empty(T)
+        for i, (u, v) in enumerate(zip(ft.src, ft.dst)):
+            lat[i], bw[i] = ct.edge_cost((u, v))
+        self.lat = lat
+        self.bw = bw
+
+    def __len__(self) -> int:
+        return self.T
+
+    def durations(self, packet_bytes) -> List[float]:
+        """Per-task Hockney durations for one group at the given per-tree
+        packet sizes (same IEEE expression as the reference engine:
+        ``lat + nbytes / bw``)."""
+        nbytes = np.asarray([packet_bytes[k] for k in self.tree])
+        return (self.lat + nbytes / self.bw).tolist()
+
+    def nbytes(self, packet_bytes) -> List[float]:
+        return [packet_bytes[k] for k in self.tree]

@@ -93,6 +93,19 @@ class Pipeline:
                 round_ix=round_ix, dep=deps)
         return ft
 
+    def compiled_template(self):
+        """The one-group template lowered onto the compiled resource layer
+        (``repro.core.routing.CompiledTemplate``): per-task resource-id CSR,
+        dependency CSR, admission ranks and Hockney constant vectors. Built
+        once per pipeline and cached in-process; plan artifacts persist only
+        ``flat_tasks()`` and re-lower lazily after load (O(T), cheaper than
+        shipping the numpy arrays — see ``repro.core.planstore``)."""
+        tpl = self.__dict__.get("_compiled_template")
+        if tpl is None:
+            tpl = self._compiled_template = \
+                self.cm.compiled().lower_template(self.flat_tasks())
+        return tpl
+
     def validate(self) -> None:
         seen: Dict[Tuple[int, Edge], bool] = {}
         for r in self.rounds:

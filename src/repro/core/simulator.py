@@ -19,17 +19,23 @@ contention, not total task count.
 
 For pipelined schedules the paper's Theorem 2 (T(m groups) = T(1) + (m-1)·Δ)
 lets us simulate a prefix of groups and extrapolate the steady state; this is
-validated against full simulation in tests and used for the huge cells.
+validated against full simulation in tests and used for the huge cells. The
+estimate semantics shared by both engines live here (``thm2_delta_floor`` /
+``thm2_extrapolate``): the measured Δ is floored by the paper's Δ* resource
+bound (Def. 8) because a still-filling prefix under-estimates the steady
+period.
 
 Two engines implement these semantics:
 
   * ``EventSimulator`` (here) — the pure-Python reference oracle, kept simple
     and close to the paper's definitions;
-  * ``repro.core.fastsim.CompiledSim`` — the flat-array engine (interned
-    resource ids, precompiled Hockney constants, counter-based coverage, and
-    a steady-state Thm-2 fast path for cyclic pipelines). Full simulations
-    replay the identical event schedule, so they match the oracle bit for
-    bit; the steady-state path shares the reference extrapolation semantics.
+  * ``repro.core.fastsim.CompiledSim`` — the round-batched flat-array engine
+    (template-lowered pipelines, vectorized frontier admission, counter-based
+    coverage, and two steady-state paths: the shared Thm-2 estimate plus a
+    verified occupancy-cycle detector that is *exact* on truly cyclic
+    schedules). Full simulations replay the identical event schedule, so
+    they match the oracle bit for bit; the estimate path shares the
+    reference extrapolation semantics. See docs/engines.md.
 
 ``make_engine``/``simulate_pipeline`` select via ``engine="fast"|"reference"``
 (fast is the default everywhere; tests compare the two).
@@ -271,6 +277,23 @@ def pipeline_tasks(pipe: Pipeline, packet_bytes: Sequence[float],
     return fixed
 
 
+def thm2_delta_floor(d_measured: float, d_star: float) -> float:
+    """The steady-state period used for Theorem-2 extrapolation: the measured
+    Δ (last two group finishes of a simulated prefix) floored by the Δ*
+    resource bound. A prefix that is still filling the pipeline measures a Δ
+    below the steady state; Δ* (Def. 8) is a hard lower bound on the true
+    period, so flooring can only improve the estimate. Both engines apply
+    exactly this rule (asserted equal in tests)."""
+    return max(d_measured, d_star)
+
+
+def thm2_extrapolate(prefix_finish: float, m0: int, num_groups: int,
+                     delta: float) -> float:
+    """Theorem 2: T(m) = T(m0) + (m - m0) · Δ for the groups beyond the
+    simulated prefix."""
+    return prefix_finish + (num_groups - m0) * delta
+
+
 def delta_star(topo: Topology, cm: ConflictModel, pipe: Pipeline,
                packet_bytes: Sequence[float]) -> float:
     """The paper's Δ* lower bound (Def. 8): allow all tree tasks active at
@@ -295,18 +318,24 @@ def delta_star(topo: Topology, cm: ConflictModel, pipe: Pipeline,
 def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
                       message_bytes: float, num_groups: int, root: int,
                       max_sim_groups: int = 6, engine: str = DEFAULT_ENGINE,
-                      ) -> Tuple[float, SimResult, float]:
+                      cycle_detect: bool = True,
+                      cycle_scan_groups: Optional[int] = None,
+                      cycle_hint=None) -> Tuple[float, SimResult, float]:
     """Simulate a pipelined broadcast of `message_bytes` split into
     `num_groups` groups (each group split across trees by tree weights).
 
     Returns (total_time, sim_result, delta). When num_groups exceeds
     `max_sim_groups`, a prefix is simulated and Theorem 2 extrapolates:
-    T(m) = T(m0) + (m - m0) * Δ. The measured Δ (last two group finishes) can
-    under-estimate the steady state while the pipeline is still filling, so it
-    is floored by the paper's Δ* resource bound (Def. 8). Both engines apply
-    the same estimate; when the fast engine's prefix was exactly periodic its
-    result additionally covers all groups (extrapolated node finishes), not
-    just the prefix.
+    T(m) = T(m0) + (m - m0) * Δ with Δ floored by Δ* (``thm2_delta_floor``).
+    Both engines apply the same estimate; the fast engine additionally
+
+      * covers all groups analytically when its prefix was exactly periodic
+        (extrapolated node finishes — exact for truly periodic schedules), and
+      * returns the *exact* result for jittery schedules whose occupancy
+        state provably cycles (``cycle_detect``; see
+        ``repro.core.fastsim.CompiledSim.run_pipeline`` for the scan budget
+        and the ``cycle_hint`` fast path). Schedules with no verified cycle
+        fall back to exactly the reference estimate.
     """
     weights = [t.weight for t in pipe.trees]
     group_bytes = message_bytes / num_groups
@@ -315,11 +344,15 @@ def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
     if engine == "fast":
         from repro.core.fastsim import CompiledSim
         run = CompiledSim(topo, cm, root).run_pipeline(
-            pipe, packet_bytes, num_groups, max_sim_groups=max_sim_groups)
+            pipe, packet_bytes, num_groups, max_sim_groups=max_sim_groups,
+            cycle_detect=cycle_detect, cycle_scan_groups=cycle_scan_groups,
+            cycle_hint=cycle_hint)
         if run.complete:
             return run.res.finish_time, run.res, run.delta
-        delta = max(run.delta, delta_star(topo, cm, pipe, packet_bytes))
-        total = run.res.finish_time + (num_groups - run.sim_groups) * delta
+        delta = thm2_delta_floor(run.delta,
+                                 delta_star(topo, cm, pipe, packet_bytes))
+        total = thm2_extrapolate(run.res.finish_time, run.sim_groups,
+                                 num_groups, delta)
         return total, run.res, delta
     if engine != "reference":
         raise ValueError(f"unknown engine {engine!r}")
@@ -331,6 +364,6 @@ def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
     d_meas = (res.group_finish[-1] - res.group_finish[-2]) if m0 >= 2 else 0.0
     if num_groups <= m0:
         return res.finish_time, res, d_meas
-    delta = max(d_meas, delta_star(topo, cm, pipe, packet_bytes))
-    total = res.finish_time + (num_groups - m0) * delta
+    delta = thm2_delta_floor(d_meas, delta_star(topo, cm, pipe, packet_bytes))
+    total = thm2_extrapolate(res.finish_time, m0, num_groups, delta)
     return total, res, delta

@@ -1,0 +1,173 @@
+"""Verified occupancy-cycle detection: exact analytic results for jittery
+pipelines, sound fallback everywhere else.
+
+The batched engine's cycle path must be *sound*: whenever it claims a
+verified cycle, the analytic T(m)/node-finish output must match a full
+reference simulation to float noise (rel <= 1e-9); whenever the scan finds
+nothing or verification rejects a pseudo-cycle (transient plateaus,
+root-streaming regimes), the fall back must be exactly the reference
+Δ*-floored Theorem-2 estimate — never a silently different number.
+
+Which schedules truly cycle is an empirical property of the fabric: the
+matrix below pins the measured behaviour on (mesh2d, dragonfly) x
+(full/all-port) for two_tree and lp_pack_K3, plus the ring16 two_tree case
+where the detector fires (the paper's smallest bench fabric).
+"""
+
+import pytest
+
+from repro.core import arborescence as arb
+from repro.core import topology as T
+from repro.core.bbs import build_plan
+from repro.core.fastsim import CompiledSim
+from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
+from repro.core.lp import solve_saturation_lp
+from repro.core.schedule import build_pipeline
+from repro.core.simulator import (EventSimulator, pipeline_tasks,
+                                  simulate_pipeline)
+
+PACKET = 2e5
+
+
+def _pipe(topo, mode, trees):
+    cm = ConflictModel(topo, mode)
+    pipe = build_pipeline(topo, trees, cm)
+    pbs = [PACKET * t.weight for t in pipe.trees]
+    return cm, pipe, pbs
+
+
+def _lp_pack(topo, K=3):
+    sol = solve_saturation_lp(topo, ConflictModel(topo, FULL_DUPLEX), 0)
+    return arb.pack_arborescences(topo, sol, K=K)
+
+
+def _assert_exact_vs_reference(topo, cm, pipe, pbs, m, run):
+    full = EventSimulator(topo, cm, 0).run(
+        pipeline_tasks(pipe, pbs, m), total_blocks=m * len(pipe.trees))
+    scale = full.finish_time
+    assert run.res.finish_time == pytest.approx(full.finish_time, rel=1e-9)
+    assert set(run.res.node_finish) == set(full.node_finish)
+    for v, t in full.node_finish.items():
+        assert abs(run.res.node_finish[v] - t) <= 1e-9 * scale, v
+    # head and tail of the group finishes are exact too (the middle is
+    # phase-approximate for rotating-phase schedules)
+    assert run.res.group_finish[0] == pytest.approx(full.group_finish[0],
+                                                    rel=1e-9)
+    for a, b in zip(run.res.group_finish[-3:], full.group_finish[-3:]):
+        assert a == pytest.approx(b, rel=1e-9)
+    assert len(run.res.group_finish) == m
+
+
+def test_two_tree_cycle_fires_and_is_exact_on_ring16():
+    """The acceptance case: a branchy two_tree schedule whose occupancy
+    state provably cycles — the analytic result must match the full
+    reference simulation, not just the Δ*-floored estimate."""
+    topo = T.ring(16)
+    cm, pipe, pbs = _pipe(topo, ALL_PORT, arb.two_tree(topo, 0))
+    m = 300
+    run = CompiledSim(topo, cm, 0).run_pipeline(
+        pipe, pbs, m, max_sim_groups=6, cycle_scan_groups=192)
+    assert run.complete and run.cycle is not None and run.cycle.verified
+    assert not run.steady   # this is the cycle path, not the estimate
+    _assert_exact_vs_reference(topo, cm, pipe, pbs, m, run)
+
+
+def test_lp_pack_cycle_fires_and_is_exact_on_mesh2d_all_port():
+    topo = T.mesh2d(4, 8)
+    cm, pipe, pbs = _pipe(topo, ALL_PORT, _lp_pack(topo))
+    m = 150
+    run = CompiledSim(topo, cm, 0).run_pipeline(
+        pipe, pbs, m, max_sim_groups=6, cycle_scan_groups=128)
+    assert run.complete and run.cycle is not None and run.cycle.verified
+    _assert_exact_vs_reference(topo, cm, pipe, pbs, m, run)
+
+
+@pytest.mark.parametrize("mk,mode,trees_of", [
+    # measured: no sustainable cycle (mesh2d full-duplex two_tree never
+    # settles; dragonfly lp_pack is a root-streaming pseudo-cycle whose
+    # transient plateau the far-anchor verification must reject)
+    (lambda: T.mesh2d(4, 8), FULL_DUPLEX, lambda t: arb.two_tree(t, 0)),
+    (lambda: T.mesh2d(4, 8), FULL_DUPLEX, _lp_pack),
+    (lambda: T.dragonfly(32), FULL_DUPLEX, _lp_pack),
+    (lambda: T.dragonfly(32), ALL_PORT, _lp_pack),
+    (lambda: T.dragonfly(32), ALL_PORT, lambda t: arb.two_tree(t, 0)),
+], ids=["mesh2d-fd-two_tree", "mesh2d-fd-lp_pack", "dragonfly-fd-lp_pack",
+        "dragonfly-ap-lp_pack", "dragonfly-ap-two_tree"])
+def test_no_verified_cycle_falls_back_to_reference_estimate(mk, mode,
+                                                            trees_of):
+    """Where no cycle survives verification, the fast engine's answer must
+    be the reference Δ*-floored Theorem-2 estimate, bit for bit."""
+    topo = mk()
+    cm, pipe, pbs = _pipe(topo, mode, trees_of(topo))
+    m = 400
+    M = PACKET * m
+    tf, rf, df = simulate_pipeline(topo, cm, pipe, M, m, 0,
+                                   max_sim_groups=6, cycle_scan_groups=64,
+                                   engine="fast")
+    tr, rr, dr = simulate_pipeline(topo, cm, pipe, M, m, 0,
+                                   max_sim_groups=6, engine="reference")
+    assert tf == tr and df == dr
+    assert rf.node_finish == rr.node_finish
+
+
+def test_num_groups_within_scan_budget_simulates_exactly():
+    """When the requested groups fit inside the scan budget, the cycle path
+    degenerates to a complete (exact) simulation instead of an estimate."""
+    topo = T.mesh2d(4, 8)
+    cm, pipe, pbs = _pipe(topo, FULL_DUPLEX, arb.two_tree(topo, 0))
+    m = 40
+    run = CompiledSim(topo, cm, 0).run_pipeline(
+        pipe, pbs, m, max_sim_groups=6, cycle_scan_groups=m)
+    assert run.complete
+    full = EventSimulator(topo, cm, 0).run(
+        pipeline_tasks(pipe, pbs, m), total_blocks=m * 2)
+    assert run.res.finish_time == full.finish_time
+    assert run.res.node_finish == full.node_finish
+
+
+def test_scan_cycle_hint_skips_scan_and_stays_exact():
+    """A hint recorded by scan_cycle (as in plan artifacts) goes straight to
+    verification; a bogus hint falls back to scanning, never to a wrong
+    answer."""
+    topo = T.ring(16)
+    cm, pipe, pbs = _pipe(topo, ALL_PORT, arb.two_tree(topo, 0))
+    sim = CompiledSim(topo, cm, 0)
+    hint = sim.scan_cycle(pipe, pbs, 64)
+    assert hint is not None and not hint.verified
+    m = 300
+    direct = sim.run_pipeline(pipe, pbs, m, max_sim_groups=6,
+                              cycle_scan_groups=192)
+    hinted = sim.run_pipeline(pipe, pbs, m, max_sim_groups=6,
+                              cycle_scan_groups=192, cycle_hint=hint)
+    assert hinted.complete and hinted.cycle is not None \
+        and hinted.cycle.verified
+    assert hinted.res.finish_time == \
+        pytest.approx(direct.res.finish_time, rel=1e-12)
+    # bogus hint: verification rejects it, the scan still finds the cycle
+    from repro.core.fastsim import CycleInfo
+    bogus = CycleInfo(period=3, delta=1.0, start=2, verified=False)
+    rescued = sim.run_pipeline(pipe, pbs, m, max_sim_groups=6,
+                               cycle_scan_groups=192, cycle_hint=bogus)
+    assert rescued.complete and rescued.cycle is not None
+    assert rescued.res.finish_time == \
+        pytest.approx(direct.res.finish_time, rel=1e-12)
+
+
+def test_build_plan_records_cycle_hint():
+    """Plans record the occupancy-cycle scan hint per candidate (schema v3).
+
+    Only jittery candidates are scanned — pattern-periodic ones (the chain
+    family) take the prefix-steady path at run time and never consult a
+    hint. Hints are scanned at the probe packet sizes, so which jittery
+    candidates carry one is fabric- and size-dependent; the all-port mesh2d
+    lp_pack candidates are a measured-stable case."""
+    topo = T.mesh2d(4, 8)
+    plan = build_plan(topo, root=0, mode=ALL_PORT)
+    by_name = {c.name: c for c in plan.candidates}
+    assert by_name["chain"].cycle is None   # probe-steady: not scanned
+    jittery_hints = [c.name for c in plan.candidates if c.cycle is not None]
+    assert any(n.startswith("lp_pack") for n in jittery_hints), jittery_hints
+    # candidates without a recurrence record None, not garbage
+    for c in plan.candidates:
+        if c.cycle is not None:
+            assert c.cycle.period >= 1 and c.cycle.delta > 0

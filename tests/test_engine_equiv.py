@@ -10,6 +10,7 @@ against a full reference run of every group.
 import pytest
 
 from repro.core import arborescence as arb
+from repro.core import fastsim
 from repro.core import topology as T
 from repro.core.baselines import BASELINES, simulate_baseline
 from repro.core.fastsim import CompiledSim
@@ -125,6 +126,36 @@ def test_transient_periodicity_matches_reference_estimate():
     tr, _, dr = simulate_pipeline(topo, cm, pipe, 2e5 * m, m, 0,
                                   max_sim_groups=6, engine="reference")
     assert tf == tr and df == dr
+
+
+@pytest.mark.parametrize("mode", [FULL_DUPLEX, ALL_PORT])
+@pytest.mark.parametrize("name", ["mesh2d", "dragonfly"])
+def test_batched_admission_path_identical(name, mode, topos, monkeypatch):
+    """Force the vectorized whole-frontier admission path (normally taken
+    only on wide frontiers) on every admission pass: results must stay
+    bit-identical — batch admission is the scalar greedy whenever the whole
+    frontier fits, and must fall back cleanly when it does not."""
+    monkeypatch.setattr(fastsim, "_BATCH_MIN_READY", 1)
+    topo = topos[name]
+    cm = ConflictModel(topo, mode)
+    trees = arb.double_chain(topo, 0)
+    for t in trees:
+        t.weight = 0.5
+    pipe = build_pipeline(topo, trees, cm)
+    packet_bytes = [1e5, 1e5]
+    m = 5
+    tasks = pipeline_tasks(pipe, packet_bytes, m)
+    ref = EventSimulator(topo, cm, 0).run(tasks, total_blocks=m * 2)
+    fast = CompiledSim(topo, cm, 0).run(tasks, total_blocks=m * 2)
+    assert fast.deliveries == ref.deliveries
+    assert fast.node_finish == ref.node_finish
+    run = CompiledSim(topo, cm, 0).run_pipeline(pipe, packet_bytes, m)
+    assert run.res.finish_time == ref.finish_time
+    assert run.res.node_finish == ref.node_finish
+    assert run.res.deliveries == ref.deliveries
+    base = simulate_baseline(topo, cm, "srda", 0, 3.2e6, engine="reference")
+    fast_b = simulate_baseline(topo, cm, "srda", 0, 3.2e6, engine="fast")
+    assert fast_b.deliveries == base.deliveries
 
 
 def test_unknown_engine_rejected():
