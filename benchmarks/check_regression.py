@@ -1,0 +1,126 @@
+"""Gate BENCH_simbench.json against committed performance floors.
+
+``benchmarks/simbench.py`` measures the engine cells and writes
+``BENCH_simbench.json``; this checker compares the speedup cells against the
+floors committed in ``benchmarks/bench_floors.json`` and exits nonzero on any
+regression — CI *fails* instead of merely uploading the artifact. Floors are
+per profile (``smoke`` vs ``full``: smaller topologies measure smaller
+speedups) and deliberately sit well below the measured values, so only a real
+regression — not CI-runner noise — trips them.
+
+Cells:
+
+  pipeline           end-to-end pipelined broadcast speedup (analytics on)
+  raw_pipeline       raw non-analytic pipeline event loop vs the oracle
+  baseline           routed-baseline raw loop, geometric mean over algorithms
+                     (vs the seed-era generic ``CompiledSim.run`` path)
+  baseline_<algo>    the same, per algorithm (srda / pipeline / bine / glf)
+
+A floor listed in the floors file but missing from the JSON fails too — a
+silently skipped cell must not read as "no regression".
+
+Usage:
+  python -m benchmarks.check_regression [BENCH_simbench.json]
+      [--floors benchmarks/bench_floors.json]
+      [--min-speedup X] [--min-raw-speedup Y] [--min-baseline-speedup Z]
+
+The ``--min-*`` flags override the corresponding committed floor (the same
+knobs ``simbench.py`` itself accepts, so ad-hoc runs can gate without
+editing the floors file).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_FLOORS = os.path.join(_HERE, "bench_floors.json")
+
+# CLI override flag -> floors-file cell name
+_OVERRIDES = {
+    "min_speedup": "pipeline",
+    "min_raw_speedup": "raw_pipeline",
+    "min_baseline_speedup": "baseline",
+}
+
+
+def extract_cells(records) -> dict:
+    """Map floor cell names to measured speedups from simbench records."""
+    cells = {}
+    for rec in records:
+        name, engine = rec.get("name"), rec.get("engine")
+        if engine != "fast":
+            continue
+        if name in ("pipeline", "raw_pipeline"):
+            cells[name] = rec["speedup"]
+        elif name == "baseline_geomean":
+            cells["baseline"] = rec["speedup"]
+        elif name == "baseline":
+            cells[f"baseline_{rec['algo']}"] = rec["speedup"]
+    return cells
+
+
+def check(data: dict, floors_by_profile: dict, overrides: dict) -> int:
+    profile = "smoke" if data.get("smoke") else "full"
+    floors = dict(floors_by_profile.get(profile, {}))
+    for flag, cell in _OVERRIDES.items():
+        if overrides.get(flag) is not None:
+            floors[cell] = overrides[flag]
+    if not floors:
+        print(f"check_regression: no floors for profile {profile!r}",
+              file=sys.stderr)
+        return 2
+    cells = extract_cells(data.get("records", []))
+    failed = False
+    for cell in sorted(floors):
+        floor = floors[cell]
+        got = cells.get(cell)
+        if got is None:
+            print(f"FAIL {cell}: cell missing from bench results "
+                  f"(floor {floor}x) — did the bench run it?")
+            failed = True
+        elif got < floor:
+            print(f"FAIL {cell}: {got:.2f}x < floor {floor}x "
+                  f"({profile} profile)")
+            failed = True
+        else:
+            print(f"ok   {cell}: {got:.2f}x >= floor {floor}x")
+    return 1 if failed else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("json", nargs="?", default="BENCH_simbench.json",
+                    help="simbench results file")
+    ap.add_argument("--floors", default=DEFAULT_FLOORS,
+                    help="committed floor values (per profile)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="override the committed 'pipeline' floor")
+    ap.add_argument("--min-raw-speedup", type=float, default=None,
+                    help="override the committed 'raw_pipeline' floor")
+    ap.add_argument("--min-baseline-speedup", type=float, default=None,
+                    help="override the committed 'baseline' (geomean) floor")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.json) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"check_regression: cannot read {args.json}: {exc}",
+              file=sys.stderr)
+        return 2
+    try:
+        with open(args.floors) as f:
+            floors = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"check_regression: cannot read floors {args.floors}: {exc}",
+              file=sys.stderr)
+        return 2
+    return check(data, floors, vars(args))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

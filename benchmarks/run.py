@@ -93,8 +93,12 @@ def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
                                                    topo=topo)
                             t, _ = broadcast_time(plan, M)
                         else:
-                            t = simulate_baseline(topo, cm, algo, root,
-                                                  M).finish_time
+                            # lowered task lists round-trip through the
+                            # plan store too: repeats of a (topo, root,
+                            # algo, M) cell skip generation and lowering
+                            t = simulate_baseline(
+                                topo, cm, algo, root, M,
+                                store=plan_store()).finish_time
                         ts.append(t)
                     mean = sum(ts) / len(ts)
                     per_algo[algo] = mean

@@ -7,6 +7,13 @@ so the perf trajectory is tracked across PRs (uploaded as a CI artifact by
 
   raw_run        tasks/sec of EventSimulator.run vs CompiledSim.run on the
                  *identical* expanded task list (generic task-list loop)
+  baseline       the routed-baseline raw loop: simulate_baseline through the
+                 memoized ``CompiledTaskList`` lowering (segment folding for
+                 the chain family) vs the seed-era generic ``CompiledSim.run``
+                 path (per-call interning + bitmap coverage, frozen below as
+                 ``_seed_generic_run`` and asserted bit-identical before any
+                 speedup is reported). One record per algorithm plus the
+                 geometric-mean headline cell; CPU-time, interleaved reps
   raw_pipeline   the raw (non-analytic) pipeline event loop: reference =
                  expand m groups + simulate; fast = the template core
                  simulating every group (steady/cycle analytics disabled).
@@ -46,6 +53,238 @@ def _best_of(fn, repeats: int) -> float:
         fn()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def _best_of_cpu_interleaved(fns, repeats: int, target_s: float = 0.6):
+    """Best-of CPU time per function, interleaving the contenders on every
+    repeat (A B A B ... rather than A A B B) so drift on a noisy box hits
+    both sides alike. Each timed sample loops the function enough times to
+    outlast the CPU-clock quantum; returns per-call seconds."""
+    iters = []
+    for fn in fns:
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        iters.append(max(1, int(target_s / max(dt, 1e-9))))
+    best = [float("inf")] * len(fns)
+    for _ in range(repeats):
+        for j, fn in enumerate(fns):
+            t0 = time.process_time()
+            for _ in range(iters[j]):
+                fn()
+            best[j] = min(best[j], (time.process_time() - t0) / iters[j])
+    return best
+
+
+_SEED_BATCH_MIN_READY = 24    # frozen copy of the seed-era threshold
+
+
+class _SeedResourceCSR:
+    """Frozen copy of the seed-era ``_ResourceCSR`` (vectorized frontier
+    feasibility), so the comparator below stays independent of future
+    changes to the live engine's batch-admission core."""
+
+    def __init__(self, res_ids, num_res, caps):
+        import numpy as np
+        indptr = np.zeros(len(res_ids) + 1, dtype=np.int64)
+        for i, ids in enumerate(res_ids):
+            indptr[i + 1] = indptr[i] + len(ids)
+        self.indptr = indptr
+        self.flat = np.fromiter((r for ids in res_ids for r in ids),
+                                dtype=np.int64, count=int(indptr[-1]))
+        self.caps = np.asarray(caps, dtype=np.int64)
+
+    def feasible(self, tasks, busy):
+        import numpy as np
+        rows = np.asarray(tasks, dtype=np.int64)
+        starts = self.indptr[rows]
+        lens = self.indptr[rows + 1] - starts
+        total = int(lens.sum())
+        if not total:
+            return list(busy)
+        gather = np.repeat(starts - np.cumsum(lens) + lens, lens) \
+            + np.arange(total)
+        counts = np.bincount(self.flat[gather], minlength=len(self.caps))
+        new = np.asarray(busy, dtype=np.int64) + counts
+        if np.any(new > self.caps):
+            return None
+        return new.tolist()
+
+
+def _seed_generic_run(sim, tasks, total_blocks):
+    """Frozen replica of the seed-era generic ``CompiledSim.run`` path (PR-4:
+    per-call task interning, bitmap block coverage, blocking on every busy
+    resource) — the comparator for the ``baseline`` cell. Kept verbatim
+    (including its own copies of the batch threshold and CSR feasibility)
+    so the cell keeps measuring the same thing as the engine evolves; its
+    results are asserted bit-identical to the live engine before any
+    speedup is reported, so semantic drift cannot hide here."""
+    import heapq
+
+    from repro.core.simulator import SimResult
+
+    idx = sim.idx
+    n = len(tasks)
+    order = sorted(range(n), key=lambda i: tasks[i].priority)
+    rank = [0] * n
+    for pos, i in enumerate(order):
+        rank[i] = pos
+
+    ecache = {}
+    res_ids = []
+    durs = []
+    nbytes = []
+    dsts = []
+    blks = []
+    grps = []
+    for t in tasks:
+        e = (t.src, t.dst)
+        ent = ecache.get(e)
+        if ent is None:
+            lat, bw = idx.edge_cost(e)
+            ent = ecache[e] = (idx.edge_ids(e), lat, bw)
+        ids, lat, bw = ent
+        res_ids.append(ids)
+        durs.append(lat + t.nbytes / bw)
+        nbytes.append(t.nbytes)
+        dsts.append(t.dst)
+        blks.append(t.blk)
+        grps.append(t.group)
+
+    dep_left = [len(t.deps) for t in tasks]
+    children = [None] * n
+    for i, t in enumerate(tasks):
+        for d in t.deps:
+            c = children[d]
+            if c is None:
+                children[d] = [i]
+            else:
+                c.append(i)
+
+    state = bytearray(n)
+    ready = []
+    for i in range(n):
+        if not dep_left[i]:
+            state[i] = 1
+            ready.append((rank[i], i))
+    heapq.heapify(ready)
+
+    caps = idx.caps
+    busy = [0] * idx.num_resources()
+    res_wait = [None] * len(busy)
+    nn = sim.topo.num_nodes
+    root = sim.root
+    remaining = [total_blocks] * nn
+    remaining[root] = 0
+    seen = [None] * nn
+    node_finish = {root: 0.0}
+    deliveries = []
+    group_last = {}
+    events = []
+    seq = 0
+    now = 0.0
+    started = 0
+    push = heapq.heappush
+    pop = heapq.heappop
+    deliver = deliveries.append
+    csr = [None]
+
+    def admit():
+        nonlocal seq, started, busy
+        if len(ready) >= _SEED_BATCH_MIN_READY:
+            if csr[0] is None:
+                csr[0] = _SeedResourceCSR(res_ids, len(busy), caps)
+            batch = csr[0].feasible([i for _, i in ready], busy)
+            if batch is not None:
+                busy = batch
+                for _, i in sorted(ready):
+                    push(events, (now + durs[i], seq, i))
+                    seq += 1
+                    state[i] = 3
+                started += len(ready)
+                ready.clear()
+                return
+        while ready:
+            _, i = pop(ready)
+            if state[i] != 1:
+                continue
+            rs = res_ids[i]
+            blocked = None
+            for r in rs:
+                if busy[r] >= caps[r]:
+                    if blocked is None:
+                        blocked = [r]
+                    else:
+                        blocked.append(r)
+            if blocked is not None:
+                state[i] = 2
+                for r in blocked:
+                    w = res_wait[r]
+                    if w is None:
+                        res_wait[r] = [i]
+                    else:
+                        w.append(i)
+                continue
+            for r in rs:
+                busy[r] += 1
+            push(events, (now + durs[i], seq, i))
+            seq += 1
+            started += 1
+            state[i] = 3
+
+    admit()
+    completed = 0
+    while events:
+        now, _, i = pop(events)
+        state[i] = 4
+        completed += 1
+        rs = res_ids[i]
+        for r in rs:
+            busy[r] -= 1
+        d = dsts[i]
+        rem = remaining[d]
+        if rem > 0:
+            sb = seen[d]
+            if sb is None:
+                sb = seen[d] = bytearray(total_blocks)
+            fresh = 0
+            for b in range(*blks[i]):
+                if not sb[b]:
+                    sb[b] = 1
+                    fresh += 1
+            if fresh:
+                rem -= fresh
+                remaining[d] = rem
+                if rem <= 0 and d not in node_finish:
+                    node_finish[d] = now
+        deliver((now, nbytes[i]))
+        g = grps[i]
+        if g is not None:
+            prev = group_last.get(g)
+            if prev is None or now > prev:
+                group_last[g] = now
+        ch = children[i]
+        if ch is not None:
+            for j in ch:
+                dl = dep_left[j] - 1
+                dep_left[j] = dl
+                if not dl and state[j] == 0:
+                    state[j] = 1
+                    push(ready, (rank[j], j))
+        for r in rs:
+            w = res_wait[r]
+            if w is not None:
+                res_wait[r] = None
+                for j in w:
+                    if state[j] == 2:
+                        state[j] = 1
+                        push(ready, (rank[j], j))
+        admit()
+
+    gf = [group_last[g] for g in sorted(group_last)] if group_last else []
+    return SimResult(finish_time=max(node_finish.values()),
+                     node_finish=node_finish, deliveries=deliveries,
+                     group_finish=gf, started=started, completed=completed)
 
 
 def _record(name: str, engine: str, topo: str, n: int, groups: int,
@@ -142,6 +381,69 @@ def bench_engines(topo_name: str, n: int, groups: int, message_bytes: float,
     return out
 
 
+def bench_baselines(topo_name: str, n: int, message_bytes: float,
+                    repeats: int) -> float:
+    """The routed-baseline raw loop: memoized lowering + folded/generic
+    engine (what ``simulate_baseline`` runs today) vs the seed-era per-call
+    path (task generation + ``_seed_generic_run``). Bit-identity against the
+    reference oracle is asserted per algorithm before timing; the timing is
+    CPU-time with interleaved repeats. Returns the geometric-mean speedup
+    (the gated headline); per-algorithm records land in the JSON."""
+    import math
+
+    from repro.core import topology as T
+    from repro.core.baselines import BASELINES, lower_baseline
+    from repro.core.fastsim import CompiledSim
+    from repro.core.intersection import FULL_DUPLEX, ConflictModel
+    from repro.core.simulator import EventSimulator
+
+    topo = T.by_name(topo_name, n)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    sim = CompiledSim(topo, cm, 0)
+    ref_sim = EventSimulator(topo, cm, 0)
+    algos = ("srda", "pipeline", "bine", "glf")
+    speedups = []
+    for algo in algos:
+        tasks = BASELINES[algo](topo, 0, message_bytes)
+        tb = max(t.blk[1] for t in tasks)
+        ref = ref_sim.run(tasks, total_blocks=tb)
+        ctl = lower_baseline(topo, cm, algo, 0, message_bytes)
+        fast = sim.run_lowered(ctl)
+        seed = _seed_generic_run(sim, tasks, tb)
+        for got, engine in ((fast, "lowered"), (seed, "seed replica")):
+            assert got.finish_time == ref.finish_time \
+                and got.node_finish == ref.node_finish \
+                and got.deliveries == ref.deliveries, \
+                f"baseline {algo}: {engine} path diverged from the oracle"
+
+        def run_seed():
+            ts = BASELINES[algo](topo, 0, message_bytes)
+            _seed_generic_run(sim, ts, tb)
+
+        def run_fast():
+            sim.run_lowered(lower_baseline(topo, cm, algo, 0, message_bytes))
+
+        t_seed, t_fast = _best_of_cpu_interleaved([run_seed, run_fast],
+                                                  repeats)
+        speedup = t_seed / t_fast
+        speedups.append(speedup)
+        tag = f"{topo_name}_{n}_{algo}"
+        folded = bool(ctl.seg is not None and ctl.seg.foldable)
+        print(f"baseline_seed_{tag},{t_seed * 1e6:.0f},"
+              f"{len(tasks) / t_seed:.0f} tasks/s")
+        print(f"baseline_fast_{tag},{t_fast * 1e6:.0f},"
+              f"{len(tasks) / t_fast:.0f} tasks/s (bit-identical; "
+              f"folded={folded})")
+        print(f"baseline_speedup_{tag},{speedup:.2f},x")
+        _record("baseline", "fast", topo_name, n, 0, len(tasks) / t_fast,
+                speedup, algo=algo, folded=folded, n_tasks=len(tasks))
+    geomean = math.exp(sum(math.log(s) for s in speedups) / len(speedups))
+    print(f"baseline_speedup_geomean_{topo_name}_{n},{geomean:.2f},x")
+    _record("baseline_geomean", "fast", topo_name, n, 0, 0.0, geomean,
+            algos=list(algos))
+    return geomean
+
+
 def bench_cycle(repeats: int) -> None:
     """Verified occupancy-cycle path on a jittery schedule (two_tree on the
     all-port ring16): the detector must fire and match the full run."""
@@ -205,18 +507,15 @@ def main(argv=None) -> int:
     ap.add_argument("--groups", type=int, default=16)
     ap.add_argument("--message", type=float, default=16e6)
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--min-speedup", type=float, default=None,
-                    help="exit nonzero if the pipeline speedup is below this")
-    ap.add_argument("--min-raw-speedup", type=float, default=None,
-                    help="exit nonzero if the raw non-analytic pipeline "
-                         "loop speedup (vs the reference oracle) is below")
     ap.add_argument("--json", default="BENCH_simbench.json",
-                    help="machine-readable results path ('' disables)")
+                    help="machine-readable results path ('' disables); "
+                         "gate it with benchmarks.check_regression (one "
+                         "gate implementation, committed floors)")
     args = ap.parse_args(argv)
 
     n = args.n or (64 if args.smoke else 256)
-    speedups = bench_engines(args.topo, n, args.groups, args.message,
-                             args.repeats)
+    bench_engines(args.topo, n, args.groups, args.message, args.repeats)
+    bench_baselines(args.topo, n, args.message, args.repeats)
     bench_cycle(args.repeats)
     bench_build_plan(args.topo, 64 if args.smoke else 128)
     if args.json:
@@ -226,19 +525,9 @@ def main(argv=None) -> int:
                        "created": time.time(),
                        "records": _RECORDS}, f, indent=1)
         print(f"# wrote {os.path.abspath(args.json)}", file=sys.stderr)
-    ok = True
-    if args.min_speedup is not None and \
-            speedups["pipeline"] < args.min_speedup:
-        print(f"FAIL: pipeline speedup {speedups['pipeline']:.2f}x "
-              f"< floor {args.min_speedup}x", file=sys.stderr)
-        ok = False
-    if args.min_raw_speedup is not None and \
-            speedups["raw_pipeline"] < args.min_raw_speedup:
-        print(f"FAIL: raw pipeline loop speedup "
-              f"{speedups['raw_pipeline']:.2f}x "
-              f"< floor {args.min_raw_speedup}x", file=sys.stderr)
-        ok = False
-    return 0 if ok else 1
+    # gating lives in exactly one place: benchmarks/check_regression.py
+    # against the committed floors (see `make bench` / `make bench-smoke`)
+    return 0
 
 
 if __name__ == "__main__":

@@ -17,6 +17,11 @@ the event simulator.
 All generators return SendTask lists (explicit deps; block ranges for partial
 messages); the shared simulator engine (fast by default, the EventSimulator
 oracle via ``engine="reference"``) charges identical network costs as BBS.
+On the fast path the list is *lowered once* onto the compiled resource layer
+(``lower_baseline`` -> ``repro.core.routing.CompiledTaskList``, memoized per
+(algorithm, root, nbytes) and optionally persisted through the plan store),
+so repeated simulations of one baseline pay only the event loop, not the
+per-call task interning.
 
 Routed sends — srda's recursive-doubling exchanges, glf/bine's virtual-rank
 strides, the rank-order chain — address arbitrary endpoint pairs; on flat
@@ -32,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import arborescence as arb
 from repro.core.intersection import ConflictModel
+from repro.core.routing import CompiledTaskList
 from repro.core.simulator import (DEFAULT_ENGINE, EventSimulator, SendTask,
                                   SimResult, make_engine)
 from repro.core.topology import Edge, Topology
@@ -279,9 +285,59 @@ BASELINES = {
 }
 
 
+def lower_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
+                   nbytes: float, store=None) -> CompiledTaskList:
+    """The lowered task list for baseline ``name`` at ``(root, nbytes)``,
+    memoized per compiled model.
+
+    First call generates the ``SendTask`` list and lowers it
+    (``repro.core.routing.CompiledTaskList``); repeats hit the in-process
+    memo on ``cm.compiled()``. With ``store`` (a
+    ``repro.core.planstore.PlanStore``) the structural lowering also
+    round-trips through a content-addressed on-disk artifact keyed by
+    (topology fingerprint, mode, algorithm, root, nbytes), so other
+    processes skip both generation and lowering (dense resource ids rebind
+    per process — see ``CompiledTaskList.bind``)."""
+    ct = cm.compiled()
+    key = (name, root, float(nbytes))
+    ctl = ct.lowered_cache.get(key)
+    if store is not None:
+        # always consult the store so the artifact lands on disk even when
+        # this process already lowered the list (the memoized lowering is
+        # handed over as the build shortcut)
+        ctl = store.get_or_lower_baseline(topo, cm, name, root, nbytes,
+                                          lowered=ctl)
+    elif ctl is None:
+        ctl = ct.lower_tasks(BASELINES[name](topo, root, nbytes))
+    ctl.bind(ct)
+    ct.lowered_cache[key] = ctl
+    return ctl
+
+
 def simulate_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
-                      nbytes: float, engine: str = DEFAULT_ENGINE) -> SimResult:
-    tasks = BASELINES[name](topo, root, nbytes)
-    total_blocks = max(t.blk[1] for t in tasks)
+                      nbytes: float, engine: str = DEFAULT_ENGINE,
+                      store=None,
+                      max_sim_segments: Optional[int] = None) -> SimResult:
+    """Simulate baseline ``name`` broadcasting ``nbytes`` from ``root``.
+
+    ``engine`` selects the execution path: ``"fast"`` (default) runs the
+    lowered task list through ``CompiledSim.run_lowered`` — the lowering is
+    memoized per (algorithm, root, nbytes) on the compiled model (and
+    optionally persisted via ``store``), so repeated calls pay only the
+    event loop; ``"reference"`` runs the ``EventSimulator`` oracle on a
+    freshly generated task list. Both produce bit-identical results
+    (asserted in tests/test_engine_equiv.py).
+
+    ``max_sim_segments`` (fast engine only) enables the segment-analytic
+    path of ``CompiledSim.run_task_list`` for fold-eligible lists: exact
+    verified-cycle results or a complete simulation, never an estimate.
+    """
     sim = make_engine(topo, cm, root, engine=engine)
-    return sim.run(tasks, total_blocks=total_blocks)
+    if engine == "fast":
+        ctl = lower_baseline(topo, cm, name, root, nbytes, store=store)
+        if max_sim_segments is not None:
+            return sim.run_task_list(lowered=ctl,
+                                     max_sim_segments=max_sim_segments).res
+        return sim.run_lowered(ctl)
+    tasks = BASELINES[name](topo, root, nbytes)
+    return sim.run(tasks, total_blocks=max(t.blk[1] for t in tasks))

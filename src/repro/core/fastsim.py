@@ -3,9 +3,15 @@
 ``CompiledSim`` is a drop-in replacement for ``EventSimulator`` built around
 the compiled routing layer (``repro.core.routing``):
 
-  * generic task lists (``run``) execute on flat per-task arrays — dense
-    resource ids, precomputed Hockney durations, counter-based block
-    coverage — with the admission loop inlined into the event loop;
+  * generic task lists (``run`` = ``lower`` + ``run_lowered``) execute on a
+    one-shot lowering (``repro.core.routing.CompiledTaskList``: admission
+    ranks, dense resource-id CSR, precomputed Hockney durations, dependency
+    fan-out) — re-runnable without re-paying the setup, which is what used
+    to dominate the routed baselines; lists whose tail is a repeated
+    per-segment pattern (the chain-pipeline family) fold into the same
+    one-live-instance-per-template-task core that pipeline groups use, and
+    ``run_task_list`` can extend the verified occupancy-cycle analytics to
+    them (exact or full-sim fallback — never an estimate);
   * cyclic pipelines (``run_pipeline``) execute straight from the lowered
     one-group template (``Pipeline.compiled_template()`` ->
     ``repro.core.routing.CompiledTemplate``): task ``g*T + t`` is template
@@ -67,7 +73,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.intersection import ConflictModel
-from repro.core.routing import CompiledTemplate
+from repro.core.routing import CompiledTaskList, CompiledTemplate
 from repro.core.schedule import Pipeline
 from repro.core.simulator import (SendTask, SimResult, delta_star,
                                   thm2_delta_floor)
@@ -129,6 +135,30 @@ class CycleInfo:
 
 
 @dataclasses.dataclass
+class TaskListRun:
+    """Result of ``CompiledSim.run_task_list``.
+
+    ``res`` always covers the whole list: fully simulated (the default — and
+    the only option for lists with no foldable segment structure), or, when
+    a segment budget was given and a verified occupancy cycle was found,
+    derived analytically from base runs of the segment template
+    (``cycle.verified``; exact — the same machinery, and the same exactness
+    guarantee, as the pipeline cycle path: finish time, node finishes and
+    group finishes are exact; the synthesized per-send delivery records are
+    capped at ``_MAX_SYNTH_DELIVERIES`` like the pipeline paths, beyond
+    which ``rate_timeline`` degrades to the base run's shape). There is no
+    estimate path for task lists: the reference engine has no extrapolation
+    semantics for them, so anything short of a verified cycle falls back to
+    the complete simulation, never a silently different number.
+    """
+
+    res: SimResult
+    sim_segments: int
+    delta: float = 0.0
+    cycle: Optional[CycleInfo] = None
+
+
+@dataclasses.dataclass
 class PipelineRun:
     """Result of ``CompiledSim.run_pipeline``.
 
@@ -162,48 +192,115 @@ class CompiledSim:
 
     # -- generic task lists (drop-in for EventSimulator.run) -----------------
 
+    def lower(self, tasks: Sequence[SendTask],
+              total_blocks: Optional[int] = None,
+              detect_segments: bool = True) -> CompiledTaskList:
+        """One-shot lowering of ``tasks`` onto the compiled resource layer
+        (``repro.core.routing.CompiledTaskList``): admission ranks, resource
+        CSR, durations, dependency fan-out, segment detection. The result is
+        reusable across runs — cache it (or let
+        ``repro.core.baselines.lower_baseline`` do so) to stop paying the
+        per-call setup that dominates short task-list simulations."""
+        return self.idx.lower_tasks(tasks, total_blocks,
+                                    detect_segments=detect_segments)
+
     def run(self, tasks: Sequence[SendTask],
             total_blocks: Optional[int] = None) -> SimResult:
-        """Same semantics (and event order) as ``EventSimulator.run``."""
+        """Same semantics (and event order) as ``EventSimulator.run``.
+
+        One-shot: the lowering is built, used once and dropped, so the
+        segment-periodicity scan (whose fold only pays off for lowerings
+        that are kept) is skipped. Callers that re-run a list should
+        ``lower()`` once and ``run_lowered`` it instead."""
+        return self.run_lowered(self.lower(tasks, total_blocks,
+                                           detect_segments=False))
+
+    def run_lowered(self, ctl: CompiledTaskList) -> SimResult:
+        """Run a lowered task list (no per-call setup; ``ctl`` is not
+        mutated and may be shared across engines of the same model).
+
+        Fold-eligible segmented lists (``ctl.seg.foldable`` — the chain
+        pipeline family) execute through the folded template core: one live
+        instance per segment-template task, vectorized whole-frontier
+        admission, the identical event schedule as the generic loop (the
+        PR-4 folding argument verbatim — instances of one template task
+        share resources and durations and are admitted strictly in segment
+        order). Everything else takes the generic flat-array loop."""
+        ctl.bind(self.idx)
+        seg = ctl.seg
+        if seg is not None and seg.foldable \
+                and seg.cover_bad <= {self.root}:
+            tpl, durs, nb = ctl.fold_template(self.idx)
+            res, _, _ = self._run_template(tpl, durs, nb, seg.q)
+            if not ctl.has_groups:
+                res = dataclasses.replace(res, group_finish=[])
+            return res
+        return self._run_generic(ctl)
+
+    def run_task_list(self, tasks: Optional[Sequence[SendTask]] = None, *,
+                      lowered: Optional[CompiledTaskList] = None,
+                      total_blocks: Optional[int] = None,
+                      max_sim_segments: Optional[int] = None,
+                      cycle_scan_segments: Optional[int] = None,
+                      ) -> TaskListRun:
+        """Run a task list with the segment-analytic machinery enabled.
+
+        When the list folds into ``q`` segment-template instances and ``q``
+        exceeds ``max_sim_segments``, the verified occupancy-cycle detector
+        (the exact pipeline path of ``run_pipeline``, applied to the segment
+        template) may derive the result analytically from base runs aligned
+        to ``q`` modulo the cycle period; a list whose cycle never verifies
+        is simulated completely — the honest fallback, since no reference
+        estimate semantics exist for task lists. ``max_sim_segments=None``
+        (the default, and what ``simulate_baseline`` uses unless asked)
+        always simulates completely."""
+        ctl = lowered if lowered is not None else self.lower(tasks,
+                                                             total_blocks)
+        ctl.bind(self.idx)
+        seg = ctl.seg
+        foldable = seg is not None and seg.foldable \
+            and seg.cover_bad <= {self.root}
+        if not foldable or max_sim_segments is None \
+                or seg.q <= max(2, max_sim_segments):
+            res = self.run_lowered(ctl)
+            gf = res.group_finish
+            return TaskListRun(res=res, sim_segments=seg.q if foldable else 0,
+                               delta=gf[-1] - gf[-2] if len(gf) >= 2 else 0.0)
+        tpl, durs, nb = ctl.fold_template(self.idx)
+        run = self._cycle_exact(tpl, durs, nb, seg.q,
+                                max(2, max_sim_segments),
+                                cycle_scan_segments, None)
+        if run is None:
+            res, _, _ = self._run_template(tpl, durs, nb, seg.q)
+            gf = res.group_finish
+            run = PipelineRun(res=res, sim_groups=seg.q, complete=True,
+                              delta=gf[-1] - gf[-2] if seg.q >= 2 else 0.0)
+        res = run.res
+        if not ctl.has_groups:
+            res = dataclasses.replace(res, group_finish=[])
+        return TaskListRun(res=res, sim_segments=run.sim_groups,
+                           delta=run.delta, cycle=run.cycle)
+
+    def _run_generic(self, ctl: CompiledTaskList) -> SimResult:
+        """The generic flat-array event loop over a lowered list — the exact
+        reference event schedule (same ranks, ties, IEEE arithmetic), with
+        batched whole-frontier admission on wide frontiers."""
         idx = self.idx
-        n = len(tasks)
-        order = sorted(range(n), key=lambda i: tasks[i].priority)
-        rank = [0] * n
-        for pos, i in enumerate(order):
-            rank[i] = pos
-        if total_blocks is None:
-            total_blocks = max((t.blk[1] for t in tasks), default=1)
-
-        ecache: Dict[Tuple[int, int], Tuple[Tuple[int, ...], float, float]] = {}
-        res_ids: List[Tuple[int, ...]] = []
-        durs: List[float] = []
-        nbytes: List[float] = []
-        dsts: List[int] = []
-        blks: List[Tuple[int, int]] = []
-        grps: List[Optional[int]] = []
-        for t in tasks:
-            e = (t.src, t.dst)
-            ent = ecache.get(e)
-            if ent is None:
-                lat, bw = idx.edge_cost(e)
-                ent = ecache[e] = (idx.edge_ids(e), lat, bw)
-            ids, lat, bw = ent
-            res_ids.append(ids)
-            durs.append(lat + t.nbytes / bw)
-            nbytes.append(t.nbytes)
-            dsts.append(t.dst)
-            blks.append(t.blk)
-            grps.append(t.group)
-
-        dep_left = [len(t.deps) for t in tasks]
-        children: List[Optional[List[int]]] = [None] * n
-        for i, t in enumerate(tasks):
-            for d in t.deps:
-                c = children[d]
-                if c is None:
-                    children[d] = [i]
-                else:
-                    c.append(i)
+        n = ctl.n
+        total_blocks = ctl.total_blocks
+        rank = ctl.rank
+        res_ids = ctl.res_ids
+        durs = ctl.durs
+        nbytes = ctl.nbytes
+        dsts = ctl.dst
+        blks = ctl.blks
+        grps = ctl.grps
+        children = ctl.children
+        dep_left = list(ctl.dep_n)
+        # all-fresh lists (proven at lowering: every (node, block) delivered
+        # at most once) take a pure per-node countdown; the bitmap path
+        # remains for lists with duplicate deliveries
+        spans = ctl.spans if ctl.all_fresh else None
 
         # state codes: 0 waiting, 1 ready, 2 blocked, 3 running, 4 done
         state = bytearray(n)
@@ -239,7 +336,8 @@ class CompiledSim:
             nonlocal seq, started, busy
             if len(ready) >= _BATCH_MIN_READY:
                 if csr[0] is None:
-                    csr[0] = _ResourceCSR(res_ids, len(busy), caps)
+                    csr[0] = _ResourceCSR.from_arrays(
+                        ctl.res_indptr, ctl.res_flat, caps)
                 batch = csr[0].feasible([i for _, i in ready], busy)
                 if batch is not None:
                     busy = batch
@@ -255,21 +353,24 @@ class CompiledSim:
                 if state[i] != 1:
                     continue
                 rs = res_ids[i]
-                blocked = None
+                blocked = -1
                 for r in rs:
                     if busy[r] >= caps[r]:
-                        if blocked is None:
-                            blocked = [r]
-                        else:
-                            blocked.append(r)
-                if blocked is not None:
+                        blocked = r
+                        break
+                if blocked >= 0:
+                    # wait on the *first* busy resource only: while it stays
+                    # busy, every wake the reference performs (on the other
+                    # busy resources' frees) fails admission right here, so
+                    # the admitted set at every event — and hence the entire
+                    # schedule — is unchanged; the thrash of re-blocking a
+                    # long wait queue across k resources per task is not
                     state[i] = 2
-                    for r in blocked:
-                        w = res_wait[r]
-                        if w is None:
-                            res_wait[r] = [i]
-                        else:
-                            w.append(i)
+                    w = res_wait[blocked]
+                    if w is None:
+                        res_wait[blocked] = [i]
+                    else:
+                        w.append(i)
                     continue
                 for r in rs:
                     busy[r] += 1
@@ -290,19 +391,25 @@ class CompiledSim:
             d = dsts[i]
             rem = remaining[d]
             if rem > 0:
-                sb = seen[d]
-                if sb is None:
-                    sb = seen[d] = bytearray(total_blocks)
-                fresh = 0
-                for b in range(*blks[i]):
-                    if not sb[b]:
-                        sb[b] = 1
-                        fresh += 1
-                if fresh:
-                    rem -= fresh
+                if spans is not None:
+                    rem -= spans[i]
                     remaining[d] = rem
                     if rem <= 0 and d not in node_finish:
                         node_finish[d] = now
+                else:
+                    sb = seen[d]
+                    if sb is None:
+                        sb = seen[d] = bytearray(total_blocks)
+                    fresh = 0
+                    for b in range(*blks[i]):
+                        if not sb[b]:
+                            sb[b] = 1
+                            fresh += 1
+                    if fresh:
+                        rem -= fresh
+                        remaining[d] = rem
+                        if rem <= 0 and d not in node_finish:
+                            node_finish[d] = now
             deliver((now, nbytes[i]))
             g = grps[i]
             if g is not None:
@@ -969,9 +1076,16 @@ class _ResourceCSR:
     def from_template(cls, tpl: CompiledTemplate, caps: List[int],
                       ) -> "_ResourceCSR":
         """Reuse the CSR arrays already lowered on the template."""
+        return cls.from_arrays(tpl.res_indptr, tpl.res_flat, caps)
+
+    @classmethod
+    def from_arrays(cls, indptr, flat, caps: List[int]) -> "_ResourceCSR":
+        """Wrap prelowered CSR arrays (template or task-list lowering); only
+        the capacity snapshot is taken per run (interning may have grown the
+        resource table since the lowering)."""
         self = cls.__new__(cls)
-        self.indptr = tpl.res_indptr
-        self.flat = tpl.res_flat
+        self.indptr = indptr
+        self.flat = flat
         self.caps = np.asarray(caps, dtype=np.int64)
         return self
 

@@ -24,6 +24,13 @@ harness used to drop under ``benchmarks/artifacts/plans/``:
     ``StalePlanError`` too, so callers can treat every failure mode as
     "rebuild".
 
+Besides BBS plans, the store also caches *lowered baseline task lists*
+(``BaselineKey`` / ``store_baseline`` / ``get_or_lower_baseline``): the
+structural lowering of a routed baseline's ``SendTask`` list
+(``repro.core.routing.CompiledTaskList``, stripped of its process-local
+dense resource ids) keyed by (fingerprint, mode, algorithm, root, nbytes),
+so repeated baseline cells skip both task generation and lowering.
+
 Bump ``SCHEMA_VERSION`` whenever the semantics or layout of pickled plans
 change (SendTask/Pipeline/FlatTasks fields, simulator event ordering, probe
 procedure, …). See ``docs/plan-artifacts.md`` for the on-disk format note.
@@ -55,6 +62,7 @@ SCHEMA_VERSION = 3
 
 _MAGIC = "bbs-plan"
 _MAGIC_PACKED = "bbs-plan-pack"
+_MAGIC_BASELINE = "bbs-baseline-tasks"
 
 
 class StalePlanError(RuntimeError):
@@ -95,6 +103,45 @@ class PackedPlanKey:
         prefix = self.topo_name or "plan"
         return f"{prefix}-multiroot-{self.mode}-v{self.schema}" \
                f"-{self.digest()}.pkl"
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineKey:
+    """Content address of one lowered baseline task-list artifact.
+
+    Baseline schedules are deterministic in (topology, algorithm, root,
+    message size), so their lowering (``repro.core.routing.CompiledTaskList``
+    minus the process-local dense resource ids) is as cacheable as a BBS
+    plan. ``nbytes`` is part of the address because the task list itself
+    depends on it (chain packet count, srda block sizes, Hockney durations).
+    """
+
+    fingerprint: str
+    mode: str
+    algo: str
+    root: int
+    nbytes: float
+    schema: int = SCHEMA_VERSION
+    topo_name: str = ""       # informational only; not part of the digest
+
+    @classmethod
+    def for_topology(cls, topo: Topology, algo: str, root: int,
+                     nbytes: float, mode: str = FULL_DUPLEX) -> "BaselineKey":
+        return cls(fingerprint=topology_fingerprint(topo), mode=mode,
+                   algo=algo, root=root, nbytes=float(nbytes),
+                   topo_name=topo.name)
+
+    def digest(self) -> str:
+        h = hashlib.sha256()
+        h.update(repr((_MAGIC_BASELINE, self.schema, self.fingerprint,
+                       self.mode, self.algo, self.root,
+                       self.nbytes)).encode())
+        return h.hexdigest()[:24]
+
+    def filename(self) -> str:
+        prefix = self.topo_name or "topo"
+        return f"{prefix}-base-{self.algo}-r{self.root}-{self.mode}" \
+               f"-v{self.schema}-{self.digest()}.pkl"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -389,6 +436,122 @@ class PlanStore:
             self.store_packed(key, plans, build_s)
         self._memo[memo_key] = (plans, build_s)
         return {r: plans[r] for r in roots}, build_s, cached
+
+    # -- lowered baseline task lists ------------------------------------------
+
+    def path_for_baseline(self, key: BaselineKey) -> str:
+        return os.path.join(self.root_dir, key.filename())
+
+    def store_baseline(self, key: BaselineKey, lowered,
+                       build_seconds: float = 0.0) -> str:
+        """Persist a lowered baseline task list under ``key``.
+
+        The pickle carries only the stable structural lowering — admission
+        ranks, dependency fan-out, durations, segment detection; the dense
+        resource ids are stripped by ``CompiledTaskList.__getstate__`` and
+        rebind per process. Write-temp-then-rename like plan artifacts."""
+        blob = {
+            "magic": _MAGIC_BASELINE,
+            "header": {
+                "schema": key.schema,
+                "fingerprint": key.fingerprint,
+                "mode": key.mode,
+                "algo": key.algo,
+                "root": key.root,
+                "nbytes": key.nbytes,
+                "topo_name": key.topo_name,
+            },
+            "meta": {
+                "build_seconds": build_seconds,
+                "created": time.time(),
+            },
+            "tasks": lowered,
+        }
+        payload = pickle.dumps(blob)
+        os.makedirs(self.root_dir, exist_ok=True)
+        path = self.path_for_baseline(key)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+        return path
+
+    def load_baseline(self, key: BaselineKey):
+        """Load and validate the lowered-baseline artifact for ``key``.
+
+        Returns (CompiledTaskList, meta) — the list is *unbound* (no dense
+        resource ids) until ``bind()``. Raises ``FileNotFoundError`` when no
+        artifact exists and ``StalePlanError`` when one fails validation
+        (same rules as plan artifacts)."""
+        path = self.path_for_baseline(key)
+        if not os.path.exists(path):
+            raise FileNotFoundError(path)
+        try:
+            with open(path, "rb") as f:
+                blob = pickle.load(f)
+        except Exception as exc:
+            raise StalePlanError(
+                f"baseline artifact {path} is unreadable ({exc!r}); delete "
+                f"and rebuild") from exc
+        if not isinstance(blob, dict) or blob.get("magic") != _MAGIC_BASELINE:
+            raise StalePlanError(
+                f"{path} is not a baseline task-list artifact — rebuild it "
+                f"through PlanStore.store_baseline")
+        header = blob["header"]
+        if header["schema"] != SCHEMA_VERSION:
+            raise StalePlanError(
+                f"{path}: engine schema version {header['schema']} != "
+                f"current {SCHEMA_VERSION}; lowered baselines must be "
+                f"rebuilt after engine-schema changes")
+        for field in ("fingerprint", "mode", "algo", "root", "nbytes"):
+            want = getattr(key, field)
+            got = header[field]
+            if got != want:
+                raise StalePlanError(
+                    f"{path}: {field} mismatch — artifact has {got!r}, "
+                    f"requested key has {want!r}; the stored lowering "
+                    f"belongs to a different fabric/algorithm/size and must "
+                    f"not be reused")
+        return blob["tasks"], dict(header, **blob.get("meta", {}))
+
+    def get_or_lower_baseline(self, topo: Topology, cm, algo: str, root: int,
+                              nbytes: float, lowered=None):
+        """Return the lowered task list for ``(topo, cm.mode, algo, root,
+        nbytes)``: in-memory memo -> on-disk artifact (validated; stale ones
+        rebuilt in place) -> generate + lower (or take ``lowered``, a list
+        the caller already built for this exact key) + persist.
+
+        The returned object may already be bound to another model of the
+        same fabric/mode, which is sound: every conflict resource is
+        interned during the candidate-edge compile in
+        ``CompiledTopology.__init__``, so equal-fingerprint models assign
+        identical dense ids — the ``bind()`` after an artifact load exists
+        for the stripped pickle, not for cross-model divergence."""
+        # the compiled model caches the fabric fingerprint — don't re-hash
+        # every candidate edge on every memo hit of the table grid
+        key = BaselineKey(fingerprint=cm.compiled().fingerprint(),
+                          mode=cm.mode, algo=algo, root=root,
+                          nbytes=float(nbytes), topo_name=topo.name)
+        memo_key = key.digest()
+        hit = self._memo.get(memo_key)
+        if hit is not None:
+            return hit
+        try:
+            loaded, _ = self.load_baseline(key)
+            self._memo[memo_key] = loaded
+            return loaded
+        except FileNotFoundError:
+            pass
+        except StalePlanError:
+            pass   # drifted artifact under the same name: rebuild, overwrite
+        t0 = time.perf_counter()
+        if lowered is None:
+            from repro.core.baselines import BASELINES
+            lowered = cm.compiled().lower_tasks(BASELINES[algo](topo, root,
+                                                                nbytes))
+        self.store_baseline(key, lowered, time.perf_counter() - t0)
+        self._memo[memo_key] = lowered
+        return lowered
 
 
 def _materialize(plan) -> None:

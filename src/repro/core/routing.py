@@ -27,6 +27,16 @@ all over the stack:
     (``repro.core.fastsim``) replays any number of pipeline groups straight
     from this template — task ``g*T + t`` is template task ``t`` of group
     ``g`` — without materializing per-group Python task objects.
+  * ``CompiledTaskList`` — an *arbitrary* ``SendTask`` list (the routed
+    baselines: srda/glf/bine/binomial/chain) lowered once the same way:
+    admission ranks from the priority sort, per-task resource-id CSR,
+    dependency/children CSR, precomputed Hockney durations, and — for lists
+    whose tail repeats a per-segment pattern (chain pipeline packets, srda's
+    ring-allgather rounds) — a detected ``SegmentInfo`` that, when the fold
+    eligibility rules hold, lets the engine execute the list as ``q``
+    instances of one segment template exactly like pipeline groups. The
+    lowering is reusable across runs and (stripped of its process-local dense
+    resource ids) picklable as a plan-store artifact.
   * ``topology_fingerprint`` — a stable content hash of the fabric (nodes,
     cables/candidate edges, per-edge Hockney constants, router attachment).
     ``repro.core.planstore`` keys plan artifacts by it so a plan can never be
@@ -38,14 +48,17 @@ is table lookups.
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
-from typing import TYPE_CHECKING, Dict, FrozenSet, List, Optional, Tuple
+from typing import (TYPE_CHECKING, Dict, FrozenSet, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 if TYPE_CHECKING:   # import cycle: topology/intersection import this module
     from repro.core.intersection import ConflictModel
     from repro.core.schedule import FlatTasks
+    from repro.core.simulator import SendTask
     from repro.core.topology import Edge, Topology
 
 Resource = Tuple
@@ -160,7 +173,8 @@ class CompiledTopology:
     """
 
     __slots__ = ("cm", "topo", "mode", "caps", "_ids", "_edge_res",
-                 "_edge_ids", "_edge_unit_ids", "_edge_cost", "_fingerprint")
+                 "_edge_ids", "_edge_unit_ids", "_edge_cost", "_fingerprint",
+                 "lowered_cache")
 
     def __init__(self, cm: "ConflictModel"):
         self.cm = cm
@@ -173,6 +187,9 @@ class CompiledTopology:
         self._edge_unit_ids: Dict["Edge", FrozenSet[int]] = {}
         self._edge_cost: Dict["Edge", Tuple[float, float]] = {}
         self._fingerprint: Optional[str] = None
+        # process-local memo for lowered task lists (baselines key it by
+        # (algorithm, root, nbytes) — see repro.core.baselines.lower_baseline)
+        self.lowered_cache: Dict = {}
         for e in self.topo.candidate_edges:             # one-shot compile
             self.edge_ids(e)
             self.edge_cost(e)
@@ -261,6 +278,18 @@ class CompiledTopology:
         reusable for any packet size and any number of groups."""
         return CompiledTemplate(self, ft)
 
+    def lower_tasks(self, tasks: Sequence["SendTask"],
+                    total_blocks: Optional[int] = None,
+                    detect_segments: bool = True) -> "CompiledTaskList":
+        """Lower an arbitrary ``SendTask`` list onto this compiled resource
+        layer (see ``CompiledTaskList``). One-shot per list; the result is
+        reusable across any number of runs and engines sharing this model.
+        ``detect_segments=False`` skips the segment-periodicity scan — the
+        right call for lowerings that are used once and thrown away, where
+        the scan cost cannot amortize and folding never pays off."""
+        return CompiledTaskList(self, tasks, total_blocks,
+                                detect_segments=detect_segments)
+
 
 class CompiledTemplate:
     """One pipeline group lowered to flat arrays on a ``CompiledTopology``.
@@ -343,3 +372,321 @@ class CompiledTemplate:
 
     def nbytes(self, packet_bytes) -> List[float]:
         return [packet_bytes[k] for k in self.tree]
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentInfo:
+    """Detected segment periodicity of a lowered task list.
+
+    The trailing ``q`` runs of ``seg_len`` tasks each repeat one structural
+    pattern (same src/dst/nbytes/block-span per position, dependencies at the
+    same relative offsets); ``prefix`` tasks precede them. ``foldable`` marks
+    lists the engine may execute as ``q`` instances of one segment template,
+    exactly like pipeline groups (requires, beyond periodicity: no prefix,
+    intra-segment single dependencies, segment-major admission ranks,
+    per-segment group tags, and deliveries that are globally fresh — every
+    (node, block) pair delivered at most once, each task carrying >= 1
+    block). ``cover_bad`` lists nodes whose deliveries do not span all blocks
+    (folding is valid only when the broadcast root is the sole such node);
+    ``reason`` names the first failed fold rule for diagnostics.
+    """
+
+    prefix: int
+    seg_len: int
+    q: int
+    foldable: bool
+    cover_bad: FrozenSet[int] = frozenset()
+    reason: str = ""
+
+
+class CompiledTaskList:
+    """An arbitrary ``SendTask`` list lowered to flat arrays on a
+    ``CompiledTopology``.
+
+    The generic engine path (``repro.core.fastsim.CompiledSim.run``) used to
+    re-derive all of this per call — priority sort, resource interning,
+    Hockney durations, dependency fan-out — which left the routed baselines
+    setup-bound. Lowering happens once per list:
+
+      * ``rank`` — the admission priority permutation (stable sort
+        over ``SendTask.priority``, exactly the reference engine's order);
+      * ``res_ids`` + CSR (``res_indptr``/``res_flat``) — per-task dense
+        resource ids for scalar admission and vectorized whole-frontier
+        occupancy counting;
+      * ``durs``/``nbytes`` — per-task Hockney durations with the scalar
+        reference's IEEE expression (``lat + nbytes / bw``);
+      * ``dep_n``/``children`` — the dependency CSR;
+      * ``blks``/``grps``/``total_blocks`` — block coverage and pipeline
+        group tags;
+      * ``seg`` — segment periodicity (``SegmentInfo``) detected from the
+        leading priority component; fold-eligible lists execute through the
+        same folded template core as pipeline groups.
+
+    Dense resource ids are *process-local* (routed non-candidate pairs intern
+    in first-use order), so pickling strips them (``__getstate__``) and
+    ``bind()`` re-derives them against the current compiled layer — the
+    stable structural work (sorting, dependency fan-out, durations, segment
+    detection) is what an artifact saves.
+    """
+
+    __slots__ = ("n", "total_blocks", "num_nodes", "rank", "src",
+                 "dst", "nbytes", "durs", "blks", "spans", "all_fresh",
+                 "cover_bad", "grps", "has_groups", "deps", "dep_n",
+                 "children", "seg", "res_ids", "res_indptr", "res_flat",
+                 "_tpl")
+
+    def __init__(self, ct: CompiledTopology, tasks: Sequence["SendTask"],
+                 total_blocks: Optional[int] = None,
+                 detect_segments: bool = True):
+        self.num_nodes = ct.topo.num_nodes
+        n = self.n = len(tasks)
+        order = sorted(range(n), key=lambda i: tasks[i].priority)
+        rank = [0] * n
+        for pos, i in enumerate(order):
+            rank[i] = pos
+        self.rank = rank
+        if total_blocks is None:
+            total_blocks = max((t.blk[1] for t in tasks), default=1)
+        self.total_blocks = total_blocks
+
+        src: List[int] = []
+        dst: List[int] = []
+        nbytes: List[float] = []
+        durs: List[float] = []
+        blks: List[Tuple[int, int]] = []
+        grps: List[Optional[int]] = []
+        deps: List[Tuple[int, ...]] = []
+        ecache: Dict["Edge", Tuple[float, float]] = {}
+        for t in tasks:
+            e = (t.src, t.dst)
+            ent = ecache.get(e)
+            if ent is None:
+                ent = ecache[e] = ct.edge_cost(e)
+            lat, bw = ent
+            src.append(t.src)
+            dst.append(t.dst)
+            nbytes.append(t.nbytes)
+            durs.append(lat + t.nbytes / bw)
+            blks.append(t.blk)
+            grps.append(t.group)
+            deps.append(tuple(t.deps))
+        self.src = src
+        self.dst = dst
+        self.nbytes = nbytes
+        self.durs = durs
+        self.blks = blks
+        self.grps = grps
+        self.has_groups = n > 0 and all(g is not None for g in grps)
+        self.deps = deps
+        self.dep_n = [len(d) for d in deps]
+        children: List[Optional[List[int]]] = [None] * n
+        for i, ds in enumerate(deps):
+            for d in ds:
+                c = children[d]
+                if c is None:
+                    children[d] = [i]
+                else:
+                    c.append(i)
+        self.children = [tuple(c) if c is not None else None
+                         for c in children]
+
+        self.spans = [hi - lo for lo, hi in blks]
+        self._analyze_freshness()
+        self.res_ids: Optional[List[Tuple[int, ...]]] = None
+        self.res_indptr = None
+        self.res_flat = None
+        self._tpl = None
+        self.bind(ct)
+        self.seg = self._detect_segments(tasks) if detect_segments else None
+
+    def _analyze_freshness(self) -> None:
+        """Prove (or refute) once that every delivery is globally fresh:
+        each (node, block) pair delivered at most once, every task carrying
+        >= 1 block. When it holds (the whole-message trees, the chain
+        family and the pipeline expansion — but *not* srda, whose allgather
+        re-delivers ranges that intermediate scatter hops already hold),
+        per-node block coverage degenerates to a pure countdown — the
+        bitmap path in the engine is never needed — and a node's finish
+        time is exactly the completion of its last delivery. ``cover_bad``
+        collects nodes whose deliveries do not span all blocks (sound lists
+        leave at most the broadcast root there)."""
+        tb = self.total_blocks
+        if self.n and all(s == 1 for s in self.spans) \
+                and all(0 <= b[0] < tb for b in self.blks):
+            # the common single-block shape, vectorized
+            d = np.asarray(self.dst, dtype=np.int64)
+            keys = d * tb + np.asarray([b[0] for b in self.blks],
+                                       dtype=np.int64)
+            fresh = int(np.unique(keys).size) == self.n
+            if fresh:
+                counts = np.bincount(d, minlength=self.num_nodes)
+                self.all_fresh = True
+                self.cover_bad = frozenset(
+                    int(v) for v in np.nonzero(counts != tb)[0])
+                return
+            self.all_fresh = False
+            self.cover_bad = frozenset(range(self.num_nodes))
+            return
+        seen: set = set()
+        node_blocks: Dict[int, int] = {}
+        fresh = True
+        for i, (lo, hi) in enumerate(self.blks):
+            if hi - lo < 1:
+                fresh = False
+                break
+            d = self.dst[i]
+            for b in range(lo, hi):
+                if (d, b) in seen:
+                    fresh = False
+                    break
+                seen.add((d, b))
+            else:
+                node_blocks[d] = node_blocks.get(d, 0) + (hi - lo)
+                continue
+            break
+        self.all_fresh = fresh
+        self.cover_bad = frozenset(
+            v for v in range(self.num_nodes)
+            if node_blocks.get(v, 0) != self.total_blocks) if fresh \
+            else frozenset(range(self.num_nodes))
+
+    def __len__(self) -> int:
+        return self.n
+
+    # -- process-local resource binding ---------------------------------------
+
+    def bind(self, ct: CompiledTopology) -> None:
+        """(Re-)derive the dense resource ids against ``ct``. A no-op when
+        already bound; called after unpickling, where the ids were stripped
+        (interning order is process-local for routed non-candidate pairs)."""
+        if self.res_ids is not None:
+            return
+        edge_ids = ct.edge_ids
+        res_ids = [edge_ids(e) for e in zip(self.src, self.dst)]
+        lens = np.asarray([len(ids) for ids in res_ids], dtype=np.int64)
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(lens, out=indptr[1:])
+        self.res_ids = res_ids
+        self.res_indptr = indptr
+        self.res_flat = np.asarray(
+            [r for ids in res_ids for r in ids], dtype=np.int64)
+
+    def __getstate__(self):
+        state = {s: getattr(self, s) for s in self.__slots__}
+        # dense ids depend on this process's interning history; the folded
+        # template embeds them too — both rebuild deterministically via bind()
+        state["res_ids"] = state["res_indptr"] = state["res_flat"] = None
+        state["_tpl"] = None
+        return state
+
+    def __setstate__(self, state) -> None:
+        for s in self.__slots__:
+            setattr(self, s, state[s])
+
+    # -- segment periodicity --------------------------------------------------
+
+    def _detect_segments(self, tasks: Sequence["SendTask"],
+                         ) -> Optional[SegmentInfo]:
+        """Detect a periodic tail of equal-length segments.
+
+        Candidate segmentation comes from the *leading priority component*
+        (the segmented generators — chain packets, srda allgather steps —
+        all advance it once per segment): trailing runs of equal length are
+        candidate segments. Structural shift-invariance is then verified
+        per boundary (src/dst/nbytes/block span equal, dependencies at the
+        same relative offsets), shrinking the segment count while leading
+        boundaries disagree (srda's first allgather step depends on the
+        scatter prefix, so its boundary never matches). Returns None when no
+        two trailing segments agree."""
+        n = self.n
+        if n < 4:
+            return None
+        prios = [t.priority for t in tasks]
+        if not all(isinstance(p, tuple) and len(p) >= 1 for p in prios):
+            return None
+        runs: List[Tuple[int, int]] = []           # (start, length)
+        s = 0
+        for i in range(1, n):
+            if prios[i][0] != prios[s][0]:
+                runs.append((s, i - s))
+                s = i
+        runs.append((s, n - s))
+        if len(runs) < 2:
+            return None
+        T = runs[-1][1]
+        q = 1
+        for start, length in reversed(runs[:-1]):
+            if length != T:
+                break
+            q += 1
+        if q < 2 or T < 1:
+            return None
+        prefix = n - q * T
+
+        # structural key per task, dependencies in shift-invariant relative
+        # form (dep - index): segment s equals segment s-1 iff the key
+        # slices match — one C-level list compare per boundary
+        rel = [tuple(d - i for d in ds) for i, ds in enumerate(self.deps)]
+        key = list(zip(self.src, self.dst, self.nbytes, self.spans, rel))
+        while q >= 2 and key[prefix + T:prefix + 2 * T] \
+                != key[prefix:prefix + T]:
+            prefix += T
+            q -= 1
+        if q < 2:
+            return None
+        if key[prefix + T:] != key[prefix:n - T]:
+            return None                # irregular interior — be conservative
+        return self._fold_rules(prefix, T, q)
+
+    def _fold_rules(self, prefix: int, T: int, q: int) -> SegmentInfo:
+        """Apply the fold eligibility rules to a detected segmentation (see
+        ``SegmentInfo``); every rule guards an invariant the folded template
+        core relies on for bit-identical replay."""
+
+        def no(reason: str) -> SegmentInfo:
+            return SegmentInfo(prefix=prefix, seg_len=T, q=q, foldable=False,
+                               reason=reason)
+
+        if prefix:
+            return no("prefix tasks precede the periodic segments")
+        for i in range(T):
+            ds = self.deps[i]
+            if len(ds) > 1:
+                return no("multi-dependency tasks")
+            if ds and not 0 <= ds[0] < T:
+                return no("cross-segment dependencies")
+        rank = np.asarray(self.rank)
+        if not bool((rank[T:] == rank[:-T] + T).all()):
+            return no("admission ranks are not segment-major")
+        if self.has_groups:
+            grps = np.asarray(self.grps)
+            if not bool((grps == np.arange(self.n) // T).all()):
+                return no("group tags are not the segment index")
+        elif any(g is not None for g in self.grps):
+            return no("mixed group tags")
+        if not self.all_fresh:
+            return no("deliveries are not globally fresh")
+        return SegmentInfo(prefix=0, seg_len=T, q=q, foldable=True,
+                           cover_bad=self.cover_bad)
+
+    # -- folded template ------------------------------------------------------
+
+    def fold_template(self, ct: CompiledTopology):
+        """The one-segment template of a foldable list, lowered like a
+        pipeline group (``CompiledTemplate``), plus its fixed per-task
+        durations and byte counts. The engine then executes the list as
+        ``seg.q`` template instances — task ``s*T + t`` is template task
+        ``t`` of segment ``s`` — through the identical folded event core
+        that runs pipelines."""
+        assert self.seg is not None and self.seg.foldable
+        tpl = self._tpl
+        if tpl is None:
+            from repro.core.schedule import FlatTasks
+            T = self.seg.seg_len
+            ft = FlatTasks(
+                tree=list(range(T)), src=self.src[:T], dst=self.dst[:T],
+                depth=[0] * T, round_ix=self.rank[:T],
+                dep=[ds[0] if ds else -1 for ds in self.deps[:T]])
+            tpl = self._tpl = ct.lower_template(ft)
+        return tpl, self.durs[:self.seg.seg_len], \
+            self.nbytes[:self.seg.seg_len]

@@ -30,12 +30,15 @@ Two engines implement these semantics:
   * ``EventSimulator`` (here) — the pure-Python reference oracle, kept simple
     and close to the paper's definitions;
   * ``repro.core.fastsim.CompiledSim`` — the round-batched flat-array engine
-    (template-lowered pipelines, vectorized frontier admission, counter-based
+    (template-lowered pipelines, one-shot task-list lowering
+    (``repro.core.routing.CompiledTaskList``) with segment folding for the
+    routed baselines, vectorized frontier admission, counter-based
     coverage, and two steady-state paths: the shared Thm-2 estimate plus a
     verified occupancy-cycle detector that is *exact* on truly cyclic
-    schedules). Full simulations replay the identical event schedule, so
-    they match the oracle bit for bit; the estimate path shares the
-    reference extrapolation semantics. See docs/engines.md.
+    schedules — and applies to fold-eligible task lists too). Full
+    simulations replay the identical event schedule, so they match the
+    oracle bit for bit; the estimate path shares the reference
+    extrapolation semantics. See docs/engines.md.
 
 ``make_engine``/``simulate_pipeline`` select via ``engine="fast"|"reference"``
 (fast is the default everywhere; tests compare the two).

@@ -1,0 +1,100 @@
+"""The CI bench-regression gate must actually gate.
+
+``benchmarks/check_regression.py`` compares the cells of
+``BENCH_simbench.json`` against the committed floors in
+``benchmarks/bench_floors.json`` and exits nonzero on regression. These
+tests demonstrate the failure modes end to end on synthetic results: a cell
+below its floor fails, a missing cell fails (a skipped bench must not read
+as "no regression"), floors select by profile, and CLI overrides replace
+the committed values.
+"""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import check, extract_cells, main
+
+FLOORS = {
+    "full": {"pipeline": 5.0, "raw_pipeline": 2.5, "baseline": 2.0,
+             "baseline_srda": 1.4},
+    "smoke": {"pipeline": 2.5, "baseline": 2.0},
+}
+
+
+def _data(smoke=False, pipeline=9.0, raw=4.0, base=5.0, srda=2.2):
+    return {
+        "bench": "simbench", "smoke": smoke,
+        "records": [
+            {"name": "pipeline", "engine": "fast", "speedup": pipeline},
+            {"name": "raw_pipeline", "engine": "fast", "speedup": raw},
+            {"name": "raw_pipeline", "engine": "reference", "speedup": 1.0},
+            {"name": "baseline_geomean", "engine": "fast", "speedup": base},
+            {"name": "baseline", "engine": "fast", "speedup": srda,
+             "algo": "srda"},
+        ],
+    }
+
+
+def test_extract_cells_maps_records():
+    cells = extract_cells(_data()["records"])
+    assert cells == {"pipeline": 9.0, "raw_pipeline": 4.0, "baseline": 5.0,
+                     "baseline_srda": 2.2}
+
+
+def test_all_above_floors_passes():
+    assert check(_data(), FLOORS, {}) == 0
+
+
+@pytest.mark.parametrize("kw,cell", [
+    (dict(pipeline=4.9), "pipeline"),
+    (dict(raw=2.4), "raw_pipeline"),
+    (dict(base=1.9), "baseline"),
+    (dict(srda=1.3), "baseline_srda"),
+])
+def test_cell_below_committed_floor_fails(kw, cell, capsys):
+    assert check(_data(**kw), FLOORS, {}) == 1
+    assert f"FAIL {cell}" in capsys.readouterr().out
+
+
+def test_missing_cell_fails(capsys):
+    data = _data()
+    data["records"] = [r for r in data["records"]
+                       if r["name"] != "baseline_geomean"]
+    assert check(data, FLOORS, {}) == 1
+    assert "FAIL baseline: cell missing" in capsys.readouterr().out
+
+
+def test_profile_selects_floor_set():
+    # 4.9x fails the full pipeline floor (5.0) but passes smoke (2.5)
+    assert check(_data(pipeline=4.9), FLOORS, {}) == 1
+    assert check(_data(smoke=True, pipeline=4.9), FLOORS, {}) == 0
+
+
+def test_cli_overrides_replace_committed_floor():
+    assert check(_data(), FLOORS, {"min_speedup": 9.5}) == 1
+    assert check(_data(pipeline=4.9), FLOORS, {"min_speedup": 4.5}) == 0
+
+
+def test_main_end_to_end(tmp_path):
+    """The exact CI invocation: results + floors from disk, exit code out."""
+    results = tmp_path / "BENCH_simbench.json"
+    floors = tmp_path / "floors.json"
+    floors.write_text(json.dumps(FLOORS))
+    results.write_text(json.dumps(_data()))
+    assert main([str(results), "--floors", str(floors)]) == 0
+    results.write_text(json.dumps(_data(base=1.0)))
+    assert main([str(results), "--floors", str(floors)]) == 1
+    assert main(["/nonexistent.json", "--floors", str(floors)]) == 2
+
+
+def test_committed_floors_file_is_sound():
+    """The real floors file parses and gates every cell simbench emits."""
+    from benchmarks.check_regression import DEFAULT_FLOORS
+
+    with open(DEFAULT_FLOORS) as f:
+        floors = json.load(f)
+    for profile in ("full", "smoke"):
+        assert floors[profile]["baseline"] >= 2.0   # the acceptance floor
+        assert set(floors[profile]) >= {"pipeline", "raw_pipeline",
+                                        "baseline"}

@@ -153,6 +153,64 @@ def test_scan_cycle_hint_skips_scan_and_stays_exact():
         pytest.approx(direct.res.finish_time, rel=1e-12)
 
 
+def test_task_list_cycle_fires_and_is_exact_on_chain_baseline():
+    """Segment-fold analytics for task lists: a long chain-pipeline baseline
+    (genuinely periodic) folds into its segment template, the occupancy
+    cycle verifies, and the analytic result matches the full reference
+    simulation of the raw task list to float noise."""
+    from repro.core.baselines import chain_pipeline_tasks
+
+    topo = T.ring(16)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    q = 400
+    tasks = chain_pipeline_tasks(topo, 0, 64e3 * q, packets=q)
+    sim = CompiledSim(topo, cm, 0)
+    ctl = sim.lower(tasks)
+    assert ctl.seg is not None and ctl.seg.foldable and ctl.seg.q == q
+    run = sim.run_task_list(lowered=ctl, max_sim_segments=6)
+    assert run.cycle is not None and run.cycle.verified
+    assert run.sim_segments < q      # analytic, not a disguised full sim
+    full = EventSimulator(topo, cm, 0).run(tasks, total_blocks=q)
+    scale = full.finish_time
+    assert run.res.finish_time == pytest.approx(full.finish_time, rel=1e-9)
+    assert set(run.res.node_finish) == set(full.node_finish)
+    for v, t in full.node_finish.items():
+        assert abs(run.res.node_finish[v] - t) <= 1e-9 * scale, v
+    assert len(run.res.group_finish) == q
+    for a, b in zip(run.res.group_finish[-3:], full.group_finish[-3:]):
+        assert a == pytest.approx(b, rel=1e-9)
+
+
+def test_task_list_analytics_fall_back_to_full_sim():
+    """Honest fallback matrix for ``run_task_list``: a non-foldable list
+    (srda ring-allgather — segmented but behind a scatter prefix) and a
+    foldable list whose requested budget covers it must both return the
+    complete simulation, bit-identical to the reference, with no cycle."""
+    from repro.core.baselines import BASELINES, chain_pipeline_tasks
+
+    topo = T.mesh2d(4, 6)   # 24 nodes: srda takes the ring-allgather path
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    tasks = BASELINES["srda"](topo, 0, 2.4e6)
+    sim = CompiledSim(topo, cm, 0)
+    ctl = sim.lower(tasks)
+    assert ctl.seg is not None and not ctl.seg.foldable
+    run = sim.run_task_list(lowered=ctl, max_sim_segments=6)
+    assert run.cycle is None
+    ref = EventSimulator(topo, cm, 0).run(tasks,
+                                          total_blocks=ctl.total_blocks)
+    assert run.res.finish_time == ref.finish_time
+    assert run.res.node_finish == ref.node_finish
+    assert run.res.deliveries == ref.deliveries
+
+    # foldable chain, budget >= q: plain complete (folded) simulation
+    tasks = chain_pipeline_tasks(topo, 0, 64e3 * 8, packets=8)
+    run = sim.run_task_list(tasks, max_sim_segments=8)
+    ref = EventSimulator(topo, cm, 0).run(tasks, total_blocks=8)
+    assert run.cycle is None and run.sim_segments == 8
+    assert run.res.deliveries == ref.deliveries
+    assert run.res.node_finish == ref.node_finish
+
+
 def test_build_plan_records_cycle_hint():
     """Plans record the occupancy-cycle scan hint per candidate (schema v3).
 

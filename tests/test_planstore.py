@@ -270,3 +270,104 @@ def test_packed_key_separates_modes(mesh):
     k2 = PackedPlanKey.for_topology(mesh, mode=ALL_PORT)
     assert k1.digest() != k2.digest()
     assert "multiroot" in k1.filename()
+
+
+# -- lowered baseline task-list artifacts -------------------------------------
+
+
+def test_baseline_artifact_round_trip_and_rebind(tmp_path, mesh):
+    """A stored lowering reloads unbound (no process-local resource ids),
+    rebinds against a fresh compiled model, and replays bit-identically."""
+    from repro.core.baselines import simulate_baseline
+    from repro.core.fastsim import CompiledSim
+    from repro.core.planstore import BaselineKey
+
+    cm = ConflictModel(mesh, FULL_DUPLEX)
+    ref = simulate_baseline(mesh, cm, "srda", 0, 3.2e6, engine="reference")
+    store = PlanStore(str(tmp_path))
+    got = simulate_baseline(mesh, cm, "srda", 0, 3.2e6, store=store)
+    assert got.deliveries == ref.deliveries
+    key = BaselineKey.for_topology(mesh, "srda", 0, 3.2e6, mode=FULL_DUPLEX)
+    assert os.path.exists(store.path_for_baseline(key))
+
+    # a second store/model pair (a fresh process, in effect): disk hit,
+    # rebind, identical replay — and the memo returns the same object
+    store2 = PlanStore(str(tmp_path))
+    cm2 = ConflictModel(mesh, FULL_DUPLEX)
+    lowered = store2.get_or_lower_baseline(mesh, cm2, "srda", 0, 3.2e6)
+    assert lowered.res_ids is None
+    res = CompiledSim(mesh, cm2, 0).run_lowered(lowered)
+    assert res.deliveries == ref.deliveries
+    assert res.node_finish == ref.node_finish
+    assert store2.get_or_lower_baseline(mesh, cm2, "srda", 0, 3.2e6) \
+        is lowered
+
+
+def test_baseline_key_separates_algo_root_size(mesh):
+    from repro.core.planstore import BaselineKey
+
+    base = BaselineKey.for_topology(mesh, "srda", 0, 1e6)
+    assert BaselineKey.for_topology(mesh, "bine", 0, 1e6).digest() \
+        != base.digest()
+    assert BaselineKey.for_topology(mesh, "srda", 3, 1e6).digest() \
+        != base.digest()
+    assert BaselineKey.for_topology(mesh, "srda", 0, 2e6).digest() \
+        != base.digest()
+    assert BaselineKey.for_topology(mesh, "srda", 0, 1e6,
+                                    mode=ALL_PORT).digest() != base.digest()
+
+
+def test_baseline_artifact_schema_and_key_validation(tmp_path, mesh):
+    """Stale baseline artifacts must raise, and get_or_lower_baseline must
+    rebuild them in place instead of deserializing against drifted code."""
+    from repro.core.planstore import BaselineKey
+
+    cm = ConflictModel(mesh, FULL_DUPLEX)
+    store = PlanStore(str(tmp_path))
+    store.get_or_lower_baseline(mesh, cm, "bine", 0, 1e6)
+    key = BaselineKey.for_topology(mesh, "bine", 0, 1e6, mode=FULL_DUPLEX)
+    path = store.path_for_baseline(key)
+
+    with open(path, "rb") as f:
+        blob = pickle.load(f)
+    blob["header"]["schema"] = SCHEMA_VERSION + 1
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+    with pytest.raises(StalePlanError, match="schema version"):
+        PlanStore(str(tmp_path)).load_baseline(key)
+    # mismatched algo under the right name
+    blob["header"]["schema"] = SCHEMA_VERSION
+    blob["header"]["algo"] = "srda"
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+    with pytest.raises(StalePlanError, match="algo mismatch"):
+        PlanStore(str(tmp_path)).load_baseline(key)
+    # a stale artifact is a miss: rebuilt and overwritten
+    rebuilt = PlanStore(str(tmp_path)).get_or_lower_baseline(
+        mesh, cm, "bine", 0, 1e6)
+    assert rebuilt.n > 0
+    PlanStore(str(tmp_path)).load_baseline(key)   # valid again
+
+
+def test_baseline_artifact_missing_is_filenotfound(tmp_path, mesh):
+    from repro.core.planstore import BaselineKey
+
+    with pytest.raises(FileNotFoundError):
+        PlanStore(str(tmp_path)).load_baseline(
+            BaselineKey.for_topology(mesh, "srda", 0, 1e6))
+
+
+def test_baseline_store_persists_even_after_memo_hit(tmp_path, mesh):
+    """A lowering memoized before any store was involved must still land on
+    disk the first time a store is passed — the cross-process cache contract
+    ('other processes skip generation and lowering') must not silently
+    depend on call order."""
+    from repro.core.baselines import simulate_baseline
+    from repro.core.planstore import BaselineKey
+
+    cm = ConflictModel(mesh, FULL_DUPLEX)
+    simulate_baseline(mesh, cm, "glf", 0, 1.5e6)            # memoize, no store
+    store = PlanStore(str(tmp_path))
+    simulate_baseline(mesh, cm, "glf", 0, 1.5e6, store=store)
+    key = BaselineKey.for_topology(mesh, "glf", 0, 1.5e6, mode=FULL_DUPLEX)
+    assert os.path.exists(store.path_for_baseline(key))

@@ -239,3 +239,115 @@ def test_device_schedule_rejects_multihop_edges():
     # without the compiled fabric the lowering stays permissive (virtual
     # topologies / tests drive it with logical pipelines)
     make_device_schedule(pipe, 16)
+
+
+# -- CompiledTaskList: the one-shot task-list lowering ------------------------
+
+
+def _lowered(topo, mode, algo, root, nbytes):
+    cm = ConflictModel(topo, mode)
+    tasks = BASELINES[algo](topo, root, nbytes)
+    return cm.compiled().lower_tasks(tasks), tasks, cm
+
+
+def test_task_list_lowering_matches_reference_setup():
+    """Ranks, durations and dependency fan-out of the lowering equal what
+    the engines derive per call from the raw tasks."""
+    topo = T.mesh2d(4, 8)
+    ctl, tasks, cm = _lowered(topo, FULL_DUPLEX, "srda", 0, 3.2e6)
+    ct = cm.compiled()
+    order = sorted(range(len(tasks)), key=lambda i: tasks[i].priority)
+    for pos, i in enumerate(order):
+        assert ctl.rank[i] == pos
+    for i, t in enumerate(tasks):
+        lat, bw = ct.edge_cost((t.src, t.dst))
+        assert ctl.durs[i] == lat + t.nbytes / bw
+        assert ctl.res_ids[i] == ct.edge_ids((t.src, t.dst))
+        assert ctl.dep_n[i] == len(t.deps)
+    assert ctl.total_blocks == max(t.blk[1] for t in tasks)
+    # srda re-delivers blocks that intermediate scatter hops already hold
+    # (store-and-forward coverage), so it must NOT get the countdown path
+    assert not ctl.all_fresh
+    # whole-message trees deliver to each node exactly once: countdown path
+    ctl2, _, _ = _lowered(topo, FULL_DUPLEX, "binomial", 0, 3.2e6)
+    assert ctl2.all_fresh and ctl2.cover_bad == {0}
+
+
+def test_segment_detection_chain_folds():
+    """The chain-pipeline baseline is the canonical foldable list: no
+    prefix, intra-segment deps, segment-major ranks, per-segment groups."""
+    from repro.core.baselines import chain_pipeline_tasks
+
+    topo = T.mesh2d(4, 8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    q = 20
+    tasks = chain_pipeline_tasks(topo, 0, 64e3 * q, packets=q)
+    ctl = cm.compiled().lower_tasks(tasks)
+    seg = ctl.seg
+    assert seg is not None and seg.foldable
+    assert seg.prefix == 0 and seg.q == q
+    assert seg.seg_len == topo.num_nodes - 1
+    assert seg.cover_bad == {0}          # only the root holds nothing new
+    tpl, durs, nb = ctl.fold_template(cm.compiled())
+    assert len(tpl) == seg.seg_len
+    assert durs == ctl.durs[:seg.seg_len]
+
+
+def test_segment_detection_srda_ring_prefix_not_foldable():
+    """srda on a non-power-of-two fabric: the ring-allgather rounds repeat a
+    per-segment pattern, but they sit behind the scatter prefix (and chain
+    across segments), so the detector reports them honestly un-foldable."""
+    topo = T.mesh2d(4, 6)    # 24 nodes
+    ctl, tasks, _ = _lowered(topo, FULL_DUPLEX, "srda", 0, 2.4e6)
+    seg = ctl.seg
+    assert seg is not None and not seg.foldable
+    assert seg.prefix > 0 and seg.q >= 2
+    assert seg.seg_len == topo.num_nodes
+    assert "prefix" in seg.reason
+
+
+def test_segment_detection_rejects_aperiodic_lists():
+    """Recursive-doubling srda (doubling nbytes per step) and tree
+    broadcasts have no repeating segment structure."""
+    topo = T.mesh2d(4, 8)    # 32 nodes: power of two -> recursive doubling
+    for algo in ("srda", "binomial", "bine", "glf", "flat"):
+        ctl, _, _ = _lowered(topo, FULL_DUPLEX, algo, 0, 3.2e6)
+        assert ctl.seg is None, algo
+
+
+def test_duplicate_deliveries_refute_freshness():
+    """A list re-delivering a (node, block) pair must lose the countdown
+    fast path (and fold eligibility) — the bitmap path stays exact."""
+    from repro.core.simulator import SendTask
+
+    topo = T.ring(8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    tasks = [SendTask(priority=(0, i), src=0, dst=1, nbytes=1e3, deps=(),
+                      blk=(0, 1)) for i in range(2)]
+    ctl = cm.compiled().lower_tasks(tasks)
+    assert not ctl.all_fresh
+    assert ctl.cover_bad == frozenset(range(topo.num_nodes))
+
+
+def test_task_list_pickle_strips_and_rebinds_resources():
+    """Artifacts must not carry process-local dense resource ids: pickling
+    strips them; bind() re-derives them and the replay stays identical."""
+    from repro.core.fastsim import CompiledSim
+
+    topo = T.mesh2d(4, 6)
+    ctl, tasks, cm = _lowered(topo, FULL_DUPLEX, "srda", 0, 2.4e6)
+    sim = CompiledSim(topo, cm, 0)
+    want = sim.run_lowered(ctl)
+    blob = pickle.dumps(ctl)
+    # a fresh model of the same fabric: id assignment is deterministic
+    # (every resource is interned during the candidate-edge compile), so
+    # rebinding against it must reproduce the original ids regardless of
+    # which lowerings this model served first
+    cm2 = ConflictModel(topo, FULL_DUPLEX)
+    simulate_baseline(topo, cm2, "bine", 0, 1e6)
+    restored = pickle.loads(blob)
+    assert restored.res_ids is None
+    got = CompiledSim(topo, cm2, 0).run_lowered(restored)
+    assert got.deliveries == want.deliveries
+    assert got.node_finish == want.node_finish
+    assert restored.seg == ctl.seg
