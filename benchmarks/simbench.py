@@ -444,6 +444,49 @@ def bench_baselines(topo_name: str, n: int, message_bytes: float,
     return geomean
 
 
+def bench_churn(topo_name: str, n: int, message_bytes: float) -> None:
+    """Degradation under a single mid-broadcast link kill: clean vs faulty
+    finish time, T(m) overhead, repair latency and retry count for the srda
+    baseline. Engine parity on the repaired run is asserted before
+    recording. Reported, not gated: there is no committed floor for this
+    cell (overhead is a model property, not a perf number)."""
+    from repro.core import topology as T
+    from repro.core.baselines import BASELINES, simulate_baseline
+    from repro.core.faults import FaultSchedule, verify_delivery
+    from repro.core.intersection import FULL_DUPLEX, ConflictModel
+
+    topo = T.by_name(topo_name, n)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    algo = "srda"
+    clean = simulate_baseline(topo, cm, algo, 0, message_bytes)
+    edges = sorted({(t.src, t.dst)
+                    for t in BASELINES[algo](topo, 0, message_bytes)})
+    u, v = edges[len(edges) // 2]
+    sched = FaultSchedule.kill_edge(topo, u, v, 0.45 * clean.finish_time)
+    faulty = simulate_baseline(topo, cm, algo, 0, message_bytes,
+                               engine="fast", faults=sched)
+    ref = simulate_baseline(topo, cm, algo, 0, message_bytes,
+                            engine="reference", faults=sched)
+    assert faulty.finish_time == ref.finish_time \
+        and faulty.faults == ref.faults, \
+        "churn: engines diverged on the repaired run"
+    assert verify_delivery(topo, sched, faulty, 0).ok, \
+        "churn: delivery verification failed"
+    fr = faulty.faults
+    overhead = faulty.finish_time - clean.finish_time
+    tag = f"{topo_name}_{n}_{algo}"
+    print(f"churn_clean_{tag},{clean.finish_time * 1e6:.1f},us")
+    print(f"churn_faulty_{tag},{faulty.finish_time * 1e6:.1f},us "
+          f"(overhead {overhead / clean.finish_time * 100:+.1f}%)")
+    print(f"churn_repair_latency_{tag},{fr.repair_latency * 1e6:.1f},us "
+          f"(retries={fr.retries} repair_tasks={fr.repair_tasks})")
+    _record("churn", "fast", topo_name, n, 0, 0.0, 1.0, algo=algo,
+            t_clean=clean.finish_time, t_faulty=faulty.finish_time,
+            overhead=overhead, repair_latency=fr.repair_latency,
+            retries=fr.retries, repair_tasks=fr.repair_tasks,
+            lost=len(fr.lost))
+
+
 def bench_cycle(repeats: int) -> None:
     """Verified occupancy-cycle path on a jittery schedule (two_tree on the
     all-port ring16): the detector must fire and match the full run."""
@@ -516,6 +559,7 @@ def main(argv=None) -> int:
     n = args.n or (64 if args.smoke else 256)
     bench_engines(args.topo, n, args.groups, args.message, args.repeats)
     bench_baselines(args.topo, n, args.message, args.repeats)
+    bench_churn(args.topo, 64 if args.smoke else n, args.message)
     bench_cycle(args.repeats)
     bench_build_plan(args.topo, 64 if args.smoke else 128)
     if args.json:

@@ -33,7 +33,7 @@ def main():
     step = jax.jit(rsteps.make_train_step(model, lr=1e-3))
     ckpt = CheckpointManager(CKPT, keep=3)
 
-    # phase 1: crash at step 12 (twice — exceeds max_retries=1)
+    # phase 1: crash at step 12 (max_retries=0: no retry budget, job dies)
     def bomb(s):
         if s == 12:
             raise RuntimeError("injected: pod 1 lost")

@@ -317,7 +317,8 @@ def lower_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
 def simulate_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
                       nbytes: float, engine: str = DEFAULT_ENGINE,
                       store=None,
-                      max_sim_segments: Optional[int] = None) -> SimResult:
+                      max_sim_segments: Optional[int] = None,
+                      faults=None) -> SimResult:
     """Simulate baseline ``name`` broadcasting ``nbytes`` from ``root``.
 
     ``engine`` selects the execution path: ``"fast"`` (default) runs the
@@ -331,8 +332,17 @@ def simulate_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
     ``max_sim_segments`` (fast engine only) enables the segment-analytic
     path of ``CompiledSim.run_task_list`` for fold-eligible lists: exact
     verified-cycle results or a complete simulation, never an estimate.
+
+    A non-empty ``faults`` schedule (``repro.core.faults.FaultSchedule``)
+    bypasses the lowered/folded artifacts — they bake in a static fabric —
+    and runs the raw task list through the engine's fault loop; the result
+    carries degradation metrics in ``SimResult.faults``.
     """
     sim = make_engine(topo, cm, root, engine=engine)
+    if faults:
+        tasks = BASELINES[name](topo, root, nbytes)
+        return sim.run(tasks, total_blocks=max(t.blk[1] for t in tasks),
+                       faults=faults)
     if engine == "fast":
         ctl = lower_baseline(topo, cm, name, root, nbytes, store=store)
         if max_sim_segments is not None:

@@ -224,10 +224,17 @@ def _bfs_tree(topo: Topology, root: int) -> arb.Arborescence:
 def broadcast_time(plan: BBSPlan, message_bytes: float,
                    num_groups: Optional[int] = None,
                    max_sim_groups: int = 6,
-                   engine: str = DEFAULT_ENGINE) -> Tuple[float, Dict]:
+                   engine: str = DEFAULT_ENGINE,
+                   faults=None) -> Tuple[float, Dict]:
     """Simulated BBS broadcast time: Eq.3/Eq.4 rank the candidates and pick
     m_opt; a short prefix simulation arbitrates among the top few (the
-    closed form uses measured ratios and can tie within noise)."""
+    closed form uses measured ratios and can tie within noise).
+
+    With a non-empty ``faults`` schedule the candidate is still selected on
+    the fault-free runs (the planner commits to a schedule before the fabric
+    breaks), then the winner is re-run under the schedule; the returned time
+    is the faulty one and ``info`` gains ``t_fault_free``, ``fault_overhead``,
+    ``repair_latency``, ``retries`` and the full ``fault_report``."""
     results = []
     for cand, m in plan.select(message_bytes):
         if num_groups is not None:
@@ -243,4 +250,13 @@ def broadcast_time(plan: BBSPlan, message_bytes: float,
                 delta=delta, lp_C=plan.lp.C, a_hat=cand.a_hat,
                 b_hat=cand.b_hat,
                 t_opt=cand.t_opt(message_bytes, plan.L, plan.B))
+    if faults:
+        tf, resf, df = simulate_pipeline(
+            plan.topo, plan.cm, cand.pipeline, message_bytes, m, plan.root,
+            max_sim_groups=max_sim_groups, engine=engine, faults=faults)
+        info.update(t_fault_free=total, fault_overhead=tf - total,
+                    repair_latency=resf.faults.repair_latency,
+                    retries=resf.faults.retries,
+                    fault_report=resf.faults)
+        return tf, info
     return total, info

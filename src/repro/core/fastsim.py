@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from bisect import insort
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -205,13 +206,22 @@ class CompiledSim:
                                     detect_segments=detect_segments)
 
     def run(self, tasks: Sequence[SendTask],
-            total_blocks: Optional[int] = None) -> SimResult:
+            total_blocks: Optional[int] = None,
+            faults=None) -> SimResult:
         """Same semantics (and event order) as ``EventSimulator.run``.
 
         One-shot: the lowering is built, used once and dropped, so the
         segment-periodicity scan (whose fold only pays off for lowerings
         that are kept) is skipped. Callers that re-run a list should
-        ``lower()`` once and ``run_lowered`` it instead."""
+        ``lower()`` once and ``run_lowered`` it instead.
+
+        A non-empty ``faults`` schedule (``repro.core.faults.FaultSchedule``)
+        de-folds the whole run onto the contended scalar fault loop
+        (``_run_faulty``) — folding, batch admission and both analytic
+        steady-state paths assume the static fabric that churn breaks. An
+        empty/None schedule changes nothing (bit-identical to before)."""
+        if faults:
+            return self._run_faulty(tasks, total_blocks, faults)
         return self.run_lowered(self.lower(tasks, total_blocks,
                                            detect_segments=False))
 
@@ -443,6 +453,277 @@ class CompiledSim:
                          node_finish=node_finish, deliveries=deliveries,
                          group_finish=gf, started=started,
                          completed=completed)
+
+    # -- fault-aware runs ----------------------------------------------------
+
+    def _run_faulty(self, tasks: Sequence[SendTask],
+                    total_blocks: Optional[int], faults) -> SimResult:
+        """The de-folded scalar fault loop — ``EventSimulator._run_faulty``
+        on flat arrays and dense resource ids.
+
+        Identical admission order (ready heap keyed ``(priority, index)``),
+        identical control-event handling (shared ``repro.core.faults`` heap
+        and ``plan_repair``), first-busy-resource blocking only (the PR-4
+        argument: while the first busy resource stays busy, every reference
+        wake on the other busy resources' frees — completions *and* in-flight
+        aborts — fails admission, so the admitted sequence is unchanged).
+        Folding, batch admission and countdown coverage stay off: fault
+        events invalidate the static preconditions they were proven under.
+        Bit-identity with the oracle is asserted in tests/test_faults.py."""
+        from repro.core import faults as F
+        idx = self.idx
+        topo = self.topo
+        root = self.root
+        if total_blocks is None:
+            total_blocks = max((t.blk[1] for t in tasks), default=1)
+
+        src = [t.src for t in tasks]
+        dst = [t.dst for t in tasks]
+        nbytes = [t.nbytes for t in tasks]
+        blks = [t.blk for t in tasks]
+        grps = [t.group for t in tasks]
+        prio = [tuple(t.priority) for t in tasks]
+        deps = [tuple(t.deps) for t in tasks]
+        tt = F.TaskTable(src, dst, nbytes, blks, grps, prio, deps)
+
+        fs = F.FaultState(topo)
+        ctrl, ctrl_seq = F.control_heap(faults)
+        retry_mode = faults.in_flight == F.RETRY
+
+        res_ids: List[Tuple[int, ...]] = []
+        durs: List[float] = []
+        for t in tasks:
+            e = (t.src, t.dst)
+            res_ids.append(idx.edge_ids(e))
+            lat, bw = idx.edge_cost(e)
+            durs.append(lat + t.nbytes / bw)
+        caps = idx.caps
+        busy = [0] * len(caps)
+        res_wait: List[Optional[List[int]]] = [None] * len(caps)
+
+        dep_left = [len(ds) for ds in deps]
+        children: Dict[int, List[int]] = {}
+        for i, ds in enumerate(deps):
+            for d in ds:
+                children.setdefault(d, []).append(i)
+
+        state = bytearray(len(tasks))
+        ready: List[Tuple[Tuple, int]] = []
+        for i in range(len(tasks)):
+            if dep_left[i] == 0:
+                state[i] = F.READY
+                ready.append((prio[i], i))
+        heapq.heapify(ready)
+
+        suspended: List[int] = []
+        repair_ids: set = set()
+        events: List[Tuple[float, int, int]] = []
+        seq = 0
+        now = 0.0
+        covered: Dict[int, set] = {v: set() for v in topo.compute_nodes}
+        covered[root] = set(range(total_blocks))
+        node_finish: Dict[int, float] = {root: 0.0}
+        deliveries: List[Tuple[float, float]] = []
+        group_last: Dict[int, float] = {}
+        lost_all: List[Tuple[int, int]] = []
+        started = completed = 0
+        applied = aborted = retried = cancelled_n = repaired_n = 0
+        repair_t0: Optional[float] = None
+        repair_done = 0.0
+        push = heapq.heappush
+        pop = heapq.heappop
+
+        def admit() -> None:
+            nonlocal seq, started
+            while ready:
+                _, i = pop(ready)
+                if state[i] != F.READY:
+                    continue
+                if not fs.edge_alive(src[i], dst[i]):
+                    state[i] = F.SUSPENDED
+                    suspended.append(i)
+                    continue
+                rs = res_ids[i]
+                blocked = -1
+                for r in rs:
+                    if busy[r] >= caps[r]:
+                        blocked = r
+                        break
+                if blocked >= 0:
+                    state[i] = F.BLOCKED
+                    w = res_wait[blocked]
+                    if w is None:
+                        res_wait[blocked] = [i]
+                    else:
+                        w.append(i)
+                    continue
+                for r in rs:
+                    busy[r] += 1
+                push(events, (now + durs[i], seq, i))
+                seq += 1
+                started += 1
+                state[i] = F.RUNNING
+
+        def free_and_wake(rs: Tuple[int, ...]) -> None:
+            for r in rs:
+                busy[r] -= 1
+            for r in rs:
+                w = res_wait[r]
+                if w is not None:
+                    res_wait[r] = None
+                    for j in w:
+                        if state[j] == F.BLOCKED:
+                            state[j] = F.READY
+                            push(ready, (prio[j], j))
+
+        def apply_control(op) -> None:
+            nonlocal ctrl_seq, applied, aborted, cancelled_n, repaired_n, \
+                retried, repair_t0, busy, res_wait
+            kind = op[0]
+            if kind == "retry":
+                i = op[1]
+                if state[i] == F.ABORTED:
+                    state[i] = F.READY
+                    retried += 1
+                    push(ready, (prio[i], i))
+                return
+            if kind == "heal_link":
+                fs.heal_link(op[1])
+                wake = sorted(suspended)
+                suspended.clear()
+                for i in wake:
+                    if state[i] == F.SUSPENDED:
+                        state[i] = F.READY
+                        push(ready, (prio[i], i))
+                return
+            if kind == "kill_link":
+                fs.kill_link(op[1], op[2])
+            else:
+                fs.kill_node(op[1])
+            applied += 1
+            for i in range(len(state)):
+                if state[i] != F.RUNNING:
+                    continue
+                if fs.edge_alive(src[i], dst[i]):
+                    continue
+                if not retry_mode and dst[i] not in fs.dead_nodes:
+                    continue        # completes-then-dies: let it land
+                state[i] = F.ABORTED
+                aborted += 1
+                free_and_wake(res_ids[i])
+                push(ctrl, (now + faults.retry_timeout, ctrl_seq,
+                            ("retry", i, 0.0)))
+                ctrl_seq += 1
+            pending = [i for i in range(len(state))
+                       if state[i] in F.PENDING_STATES]
+            plan = F.plan_repair(fs, tt, pending, covered, root)
+            if plan is None:
+                return
+            if repair_t0 is None:
+                repair_t0 = now
+            for i in plan.cancelled:
+                state[i] = F.CANCELLED
+            cancelled_n += len(plan.cancelled)
+            repaired_n += plan.repaired
+            lost_all.extend(plan.lost)
+            for rt in plan.new_tasks:
+                i = tt.append(rt)
+                e = (rt.src, rt.dst)
+                res_ids.append(idx.edge_ids(e))     # may intern new resources
+                lat, bw = idx.edge_cost(e)
+                durs.append(lat + rt.nbytes / bw)
+                extra = len(caps) - len(busy)
+                if extra > 0:
+                    busy.extend([0] * extra)
+                    res_wait.extend([None] * extra)
+                dl = sum(1 for d in rt.deps if state[d] != F.DONE)
+                dep_left.append(dl)
+                for d in rt.deps:
+                    children.setdefault(d, []).append(i)
+                repair_ids.add(i)
+                state.append(F.READY if dl == 0 else F.WAITING)
+                if dl == 0:
+                    push(ready, (prio[i], i))
+            for j in sorted(plan.rewires):
+                nd = plan.rewires[j]
+                old = set(deps[j])
+                deps[j] = nd
+                for d in nd:
+                    if d not in old:
+                        children.setdefault(d, []).append(j)
+                dep_left[j] = sum(1 for d in nd if state[d] != F.DONE)
+                if dep_left[j] == 0 and state[j] == F.WAITING:
+                    state[j] = F.READY
+                    push(ready, (prio[j], j))
+
+        admit()
+        while True:
+            next_t = events[0][0] if events else math.inf
+            while ctrl and ctrl[0][0] <= next_t:
+                t_c, _, op = pop(ctrl)
+                if t_c > now:
+                    now = t_c
+                apply_control(op)
+                admit()
+                next_t = events[0][0] if events else math.inf
+            if not events:
+                if ctrl:
+                    continue
+                break
+            now, _, i = pop(events)
+            if state[i] != F.RUNNING:
+                continue               # aborted/cancelled mid-flight
+            state[i] = F.DONE
+            completed += 1
+            rs = res_ids[i]
+            for r in rs:
+                busy[r] -= 1
+            d = dst[i]
+            fresh = [b for b in range(*blks[i]) if b not in covered[d]]
+            covered[d].update(fresh)
+            if d not in node_finish and len(covered[d]) >= total_blocks:
+                node_finish[d] = now
+            deliveries.append((now, nbytes[i]))
+            g = grps[i]
+            if g is not None:
+                group_last[g] = max(group_last.get(g, 0.0), now)
+            if i in repair_ids and now > repair_done:
+                repair_done = now
+            for j in children.get(i, ()):
+                dep_left[j] -= 1
+                if dep_left[j] == 0 and state[j] == F.WAITING:
+                    state[j] = F.READY
+                    push(ready, (prio[j], j))
+            for r in rs:
+                w = res_wait[r]
+                if w is not None:
+                    res_wait[r] = None
+                    for j in w:
+                        if state[j] == F.BLOCKED:
+                            state[j] = F.READY
+                            push(ready, (prio[j], j))
+            admit()
+
+        stranded = [i for i in range(len(state))
+                    if state[i] not in (F.DONE, F.CANCELLED)]
+        assert not stranded, \
+            f"{len(stranded)} tasks stranded under faults: {stranded[:5]}"
+        from repro.core.faults import FaultReport
+        report = FaultReport(
+            events_applied=applied, aborted=aborted, retries=retried,
+            cancelled=cancelled_n, repair_tasks=len(repair_ids),
+            repaired=repaired_n, dead_nodes=tuple(sorted(fs.dead_nodes)),
+            lost=tuple(sorted(set(lost_all))),
+            incomplete=tuple(sorted(v for v in topo.compute_nodes
+                                    if v not in fs.dead_nodes
+                                    and v not in node_finish)),
+            repair_latency=(repair_done - repair_t0)
+            if repair_t0 is not None and repair_done > 0.0 else 0.0)
+        gf = [group_last[g] for g in sorted(group_last)] if group_last else []
+        return SimResult(finish_time=max(node_finish.values()),
+                         node_finish=node_finish, deliveries=deliveries,
+                         group_finish=gf, started=started,
+                         completed=completed, faults=report)
 
     # -- cyclic pipelines ----------------------------------------------------
 

@@ -64,6 +64,18 @@ if TYPE_CHECKING:   # import cycle: topology/intersection import this module
 Resource = Tuple
 
 
+class Unreachable(Exception):
+    """Routing was asked for a pair the (possibly degraded) graph does not
+    connect. Raised by ``NextHopTable.path``/``next_hop``/``hops`` instead of
+    leaking the raw ``-1`` matrix sentinels — load-bearing once fault
+    injection (``repro.core.faults``) can partition a fabric mid-run."""
+
+    def __init__(self, src: int, dst: int):
+        super().__init__(f"no route {src} -> {dst}")
+        self.src = src
+        self.dst = dst
+
+
 class NextHopTable:
     """All-pairs shortest-path routing table for a flat fabric.
 
@@ -104,16 +116,31 @@ class NextHopTable:
         self.dist = dist
 
     def hops(self, i: int, j: int) -> int:
-        """Shortest hop count i -> j (0 for i == j)."""
-        return int(self.dist[i, j])
+        """Shortest hop count i -> j (0 for i == j).
+
+        Raises ``Unreachable`` on a disconnected pair; the raw ``dist``
+        matrix keeps ``-1`` there for vectorized consumers (the fault-repair
+        planner scans it directly)."""
+        d = int(self.dist[i, j])
+        if d < 0:
+            raise Unreachable(i, j)
+        return d
+
+    def reachable(self, i: int, j: int) -> bool:
+        """Whether a path i -> j exists (always true for i == j)."""
+        return bool(self.dist[i, j] >= 0)
 
     def next_hop(self, i: int, j: int) -> int:
-        """First node after ``i`` on the shortest path i -> j."""
+        """First node after ``i`` on the shortest path i -> j.
+
+        Raises ``Unreachable`` on a disconnected pair."""
         path = self.path(i, j)
         return path[1] if len(path) > 1 else j
 
     def path(self, i: int, j: int) -> Tuple[int, ...]:
-        """Node path i -> j, reconstructed by an O(length) parent walk."""
+        """Node path i -> j, reconstructed by an O(length) parent walk.
+
+        Raises ``Unreachable`` on a disconnected pair."""
         if i == j:
             return (i,)
         prev = self.parent[i]
@@ -121,7 +148,8 @@ class NextHopTable:
         v = j
         while v != i:
             v = int(prev[v])
-            assert v >= 0, f"no route {i} -> {j}"
+            if v < 0:
+                raise Unreachable(i, j)
             out.append(v)
         return tuple(reversed(out))
 

@@ -48,8 +48,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
+from repro.core import faults as _faults
+from repro.core.faults import FaultReport, FaultSchedule
 from repro.core.intersection import ConflictModel
 from repro.core.schedule import Pipeline
 from repro.core.topology import Edge, Topology
@@ -74,6 +77,7 @@ class SimResult:
     group_finish: List[float]              # finish per pipeline group
     started: int
     completed: int
+    faults: Optional[FaultReport] = None   # degradation metrics (churn runs)
 
     def rate_timeline(self, bins: int = 100) -> List[Tuple[float, float]]:
         """Aggregated receive rate over time (bytes/s per bin) — Fig. 2."""
@@ -115,7 +119,10 @@ class EventSimulator:
         self.ct = cm.compiled()   # shared routing / resource / Hockney tables
 
     def run(self, tasks: Sequence[SendTask],
-            total_blocks: Optional[int] = None) -> SimResult:
+            total_blocks: Optional[int] = None,
+            faults: Optional[FaultSchedule] = None) -> SimResult:
+        if faults:
+            return self._run_faulty(tasks, total_blocks, faults)
         topo, cm, root, ct = self.topo, self.cm, self.root, self.ct
         n_tasks = len(tasks)
         order = sorted(range(n_tasks), key=lambda i: tasks[i].priority)
@@ -233,6 +240,252 @@ class EventSimulator:
                          deliveries=deliveries, group_finish=gf,
                          started=started, completed=completed)
 
+    def _run_faulty(self, tasks: Sequence[SendTask],
+                    total_blocks: Optional[int],
+                    faults: FaultSchedule) -> SimResult:
+        """The fault-aware oracle loop (``run`` with a live FaultSchedule).
+
+        Same admission discipline as the fault-free loop, with the ready heap
+        keyed by ``(priority, task index)`` — identical order for the
+        original tasks (the fault-free rank is the stable priority sort) and
+        well-defined for repair tasks injected mid-run, whose priorities
+        extend a cancelled task's tuple. Control events (kill / heal / retry
+        wake, one shared heap) apply strictly before task completions at
+        equal times. Transiently dead routes suspend at admission and wake on
+        heal; permanently dead pending work is cancelled and re-grafted by
+        ``repro.core.faults.plan_repair`` — the repair hops are ordinary
+        tasks charged through the same resources. See docs/faults.md."""
+        F = _faults
+        topo, cm, root, ct = self.topo, self.cm, self.root, self.ct
+        if total_blocks is None:
+            total_blocks = max((t.blk[1] for t in tasks), default=1)
+
+        src = [t.src for t in tasks]
+        dst = [t.dst for t in tasks]
+        nbytes = [t.nbytes for t in tasks]
+        blks = [t.blk for t in tasks]
+        grps = [t.group for t in tasks]
+        prio = [tuple(t.priority) for t in tasks]
+        deps = [tuple(t.deps) for t in tasks]
+        tt = F.TaskTable(src, dst, nbytes, blks, grps, prio, deps)
+
+        fs = F.FaultState(topo)
+        ctrl, ctrl_seq = F.control_heap(faults)
+        retry_mode = faults.in_flight == F.RETRY
+
+        resources = [ct.resources((t.src, t.dst)) for t in tasks]
+        caps: Dict[Hashable, int] = {}
+        for rs in resources:
+            for r in rs:
+                if r not in caps:
+                    caps[r] = cm.capacity(r)
+        busy: Dict[Hashable, int] = {}
+        res_wait: Dict[Hashable, List[int]] = {}
+
+        dep_left = [len(ds) for ds in deps]
+        children: Dict[int, List[int]] = {}
+        for i, ds in enumerate(deps):
+            for d in ds:
+                children.setdefault(d, []).append(i)
+
+        state = [F.WAITING] * len(tasks)
+        ready: List[Tuple[Tuple, int]] = []
+        for i in range(len(tasks)):
+            if dep_left[i] == 0:
+                state[i] = F.READY
+                heapq.heappush(ready, (prio[i], i))
+
+        suspended: List[int] = []
+        repair_ids: set = set()
+        events: List[Tuple[float, int, int]] = []
+        seq = 0
+        now = 0.0
+        covered: Dict[int, set] = {v: set() for v in topo.compute_nodes}
+        covered[root] = set(range(total_blocks))
+        node_finish: Dict[int, float] = {root: 0.0}
+        deliveries: List[Tuple[float, float]] = []
+        group_last: Dict[int, float] = {}
+        lost_all: List[Tuple[int, int]] = []
+        started = completed = 0
+        applied = aborted = retried = cancelled_n = repaired_n = 0
+        repair_t0: Optional[float] = None
+        repair_done = 0.0
+
+        def admit() -> None:
+            nonlocal seq, started
+            while ready:
+                _, i = heapq.heappop(ready)
+                if state[i] != F.READY:
+                    continue
+                if not fs.edge_alive(src[i], dst[i]):
+                    # transiently dead route: park until a heal re-admits it
+                    # (dead-forever routes never get here — the planner
+                    # cancels them at the kill event)
+                    state[i] = F.SUSPENDED
+                    suspended.append(i)
+                    continue
+                blocked_on = [r for r in resources[i]
+                              if busy.get(r, 0) >= caps[r]]
+                if blocked_on:
+                    state[i] = F.BLOCKED
+                    for r in blocked_on:
+                        res_wait.setdefault(r, []).append(i)
+                    continue
+                for r in resources[i]:
+                    busy[r] = busy.get(r, 0) + 1
+                lat, bw = ct.edge_cost((src[i], dst[i]))
+                dur = lat + nbytes[i] / bw
+                heapq.heappush(events, (now + dur, seq, i))
+                seq += 1
+                started += 1
+                state[i] = F.RUNNING
+
+        def apply_control(op) -> None:
+            nonlocal ctrl_seq, applied, aborted, cancelled_n, repaired_n, \
+                retried, repair_t0
+            kind = op[0]
+            if kind == "retry":
+                i = op[1]
+                if state[i] == F.ABORTED:
+                    state[i] = F.READY
+                    retried += 1
+                    heapq.heappush(ready, (prio[i], i))
+                return
+            if kind == "heal_link":
+                fs.heal_link(op[1])
+                wake = sorted(suspended)
+                suspended.clear()
+                for i in wake:
+                    if state[i] == F.SUSPENDED:
+                        state[i] = F.READY
+                        heapq.heappush(ready, (prio[i], i))
+                return
+            if kind == "kill_link":
+                fs.kill_link(op[1], op[2])
+            else:
+                fs.kill_node(op[1])
+            applied += 1
+            for i in range(len(state)):
+                if state[i] != F.RUNNING:
+                    continue
+                if fs.edge_alive(src[i], dst[i]):
+                    continue
+                if not retry_mode and dst[i] not in fs.dead_nodes:
+                    continue        # completes-then-dies: let it land
+                state[i] = F.ABORTED    # the in-flight send died on the wire
+                aborted += 1
+                for r in resources[i]:
+                    busy[r] -= 1
+                for r in resources[i]:
+                    for j in res_wait.pop(r, []):
+                        if state[j] == F.BLOCKED:
+                            state[j] = F.READY
+                            heapq.heappush(ready, (prio[j], j))
+                heapq.heappush(ctrl, (now + faults.retry_timeout, ctrl_seq,
+                                      ("retry", i, 0.0)))
+                ctrl_seq += 1
+            pending = [i for i in range(len(state))
+                       if state[i] in F.PENDING_STATES]
+            plan = F.plan_repair(fs, tt, pending, covered, root)
+            if plan is None:
+                return
+            if repair_t0 is None:
+                repair_t0 = now
+            for i in plan.cancelled:
+                state[i] = F.CANCELLED
+            cancelled_n += len(plan.cancelled)
+            repaired_n += plan.repaired
+            lost_all.extend(plan.lost)
+            for rt in plan.new_tasks:
+                i = tt.append(rt)
+                resources.append(ct.resources((rt.src, rt.dst)))
+                for r in resources[i]:
+                    if r not in caps:
+                        caps[r] = cm.capacity(r)
+                dl = sum(1 for d in rt.deps if state[d] != F.DONE)
+                dep_left.append(dl)
+                for d in rt.deps:
+                    children.setdefault(d, []).append(i)
+                repair_ids.add(i)
+                state.append(F.READY if dl == 0 else F.WAITING)
+                if dl == 0:
+                    heapq.heappush(ready, (prio[i], i))
+            for j in sorted(plan.rewires):
+                nd = plan.rewires[j]
+                old = set(deps[j])
+                deps[j] = nd
+                for d in nd:
+                    if d not in old:
+                        children.setdefault(d, []).append(j)
+                dep_left[j] = sum(1 for d in nd if state[d] != F.DONE)
+                if dep_left[j] == 0 and state[j] == F.WAITING:
+                    state[j] = F.READY
+                    heapq.heappush(ready, (prio[j], j))
+
+        admit()
+        while True:
+            next_t = events[0][0] if events else math.inf
+            while ctrl and ctrl[0][0] <= next_t:
+                t_c, _, op = heapq.heappop(ctrl)
+                if t_c > now:
+                    now = t_c
+                apply_control(op)
+                admit()
+                next_t = events[0][0] if events else math.inf
+            if not events:
+                if ctrl:
+                    continue
+                break
+            now, _, i = heapq.heappop(events)
+            if state[i] != F.RUNNING:
+                continue               # aborted/cancelled mid-flight
+            state[i] = F.DONE
+            completed += 1
+            for r in resources[i]:
+                busy[r] -= 1
+            d = dst[i]
+            fresh = [b for b in range(*blks[i]) if b not in covered[d]]
+            covered[d].update(fresh)
+            if d not in node_finish and len(covered[d]) >= total_blocks:
+                node_finish[d] = now
+            deliveries.append((now, nbytes[i]))
+            g = grps[i]
+            if g is not None:
+                group_last[g] = max(group_last.get(g, 0.0), now)
+            if i in repair_ids and now > repair_done:
+                repair_done = now
+            for j in children.get(i, ()):
+                dep_left[j] -= 1
+                if dep_left[j] == 0 and state[j] == F.WAITING:
+                    state[j] = F.READY
+                    heapq.heappush(ready, (prio[j], j))
+            for r in resources[i]:
+                for j in res_wait.pop(r, []):
+                    if state[j] == F.BLOCKED:
+                        state[j] = F.READY
+                        heapq.heappush(ready, (prio[j], j))
+            admit()
+
+        stranded = [i for i in range(len(state))
+                    if state[i] not in (F.DONE, F.CANCELLED)]
+        assert not stranded, \
+            f"{len(stranded)} tasks stranded under faults: {stranded[:5]}"
+        report = FaultReport(
+            events_applied=applied, aborted=aborted, retries=retried,
+            cancelled=cancelled_n, repair_tasks=len(repair_ids),
+            repaired=repaired_n, dead_nodes=tuple(sorted(fs.dead_nodes)),
+            lost=tuple(sorted(set(lost_all))),
+            incomplete=tuple(sorted(v for v in topo.compute_nodes
+                                    if v not in fs.dead_nodes
+                                    and v not in node_finish)),
+            repair_latency=(repair_done - repair_t0)
+            if repair_t0 is not None and repair_done > 0.0 else 0.0)
+        gf = [group_last[g] for g in sorted(group_last)] if group_last else []
+        return SimResult(finish_time=max(node_finish.values()),
+                         node_finish=node_finish, deliveries=deliveries,
+                         group_finish=gf, started=started,
+                         completed=completed, faults=report)
+
 
 def pipeline_tasks(pipe: Pipeline, packet_bytes: Sequence[float],
                    num_groups: int) -> List[SendTask]:
@@ -323,7 +576,9 @@ def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
                       max_sim_groups: int = 6, engine: str = DEFAULT_ENGINE,
                       cycle_detect: bool = True,
                       cycle_scan_groups: Optional[int] = None,
-                      cycle_hint=None) -> Tuple[float, SimResult, float]:
+                      cycle_hint=None,
+                      faults: Optional[FaultSchedule] = None,
+                      ) -> Tuple[float, SimResult, float]:
     """Simulate a pipelined broadcast of `message_bytes` split into
     `num_groups` groups (each group split across trees by tree weights).
 
@@ -339,10 +594,24 @@ def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
         ``repro.core.fastsim.CompiledSim.run_pipeline`` for the scan budget
         and the ``cycle_hint`` fast path). Schedules with no verified cycle
         fall back to exactly the reference estimate.
+
+    With a non-empty ``faults`` schedule every analytic path is disabled
+    (churn breaks the periodicity they rely on — see docs/engines.md): all
+    ``num_groups`` groups are expanded and run through the chosen engine's
+    fault-aware loop; the returned result carries ``SimResult.faults``.
     """
     weights = [t.weight for t in pipe.trees]
     group_bytes = message_bytes / num_groups
     packet_bytes = [group_bytes * w for w in weights]
+
+    if faults:
+        sim = make_engine(topo, cm, root, engine)
+        res = sim.run(pipeline_tasks(pipe, packet_bytes, num_groups),
+                      total_blocks=num_groups * len(pipe.trees),
+                      faults=faults)
+        gf = res.group_finish
+        d_meas = gf[-1] - gf[-2] if len(gf) >= 2 else 0.0
+        return res.finish_time, res, d_meas
 
     if engine == "fast":
         from repro.core.fastsim import CompiledSim

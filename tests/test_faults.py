@@ -1,0 +1,262 @@
+"""Fault injection, next-hop tree repair, verified delivery under churn.
+
+The fault layer must be zero-cost-to-semantics when inactive (an empty
+schedule is bit-identical to no schedule at all — the clean engine paths are
+untouched), and under any single link/node kill mid-broadcast both engines
+must agree bit-for-bit on the *repaired* run while the delivery verifier
+confirms every surviving node reachable from the root still receives the
+complete message. The matrix here is the churn counterpart of
+tests/test_engine_equiv.py and runs in the same CI job.
+"""
+
+import math
+
+import pytest
+
+from repro.core import arborescence as arb
+from repro.core import topology as T
+from repro.core.baselines import simulate_baseline
+from repro.core.bbs import broadcast_time, build_plan
+from repro.core.fastsim import CompiledSim
+from repro.core.faults import (COMPLETE, RETRY, FaultSchedule, LinkFault,
+                               NodeFault, fabric_links, verify_delivery)
+from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
+from repro.core.schedule import build_pipeline
+from repro.core.simulator import (EventSimulator, SendTask, pipeline_tasks,
+                                  simulate_pipeline)
+
+TOPOS = [
+    ("mesh2d", lambda: T.mesh2d(4, 8)),
+    ("dragonfly", lambda: T.dragonfly(32)),
+    ("fattree", lambda: T.fat_tree(32, radix=8)),
+]
+MODES = [FULL_DUPLEX, ALL_PORT]
+
+
+@pytest.fixture(scope="module", params=TOPOS, ids=[t[0] for t in TOPOS])
+def topo(request):
+    return request.param[1]()
+
+
+def _chain_setup(topo, mode, m=6, packet=2e5):
+    cm = ConflictModel(topo, mode=mode)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    tasks = pipeline_tasks(pipe, [packet], m)
+    return cm, tasks, m * len(pipe.trees)
+
+
+def _both(topo, cm, tasks, tb, faults):
+    rr = EventSimulator(topo, cm, 0).run(tasks, total_blocks=tb,
+                                         faults=faults)
+    ff = CompiledSim(topo, cm, 0).run(tasks, total_blocks=tb, faults=faults)
+    assert rr.finish_time == ff.finish_time
+    assert rr.node_finish == ff.node_finish
+    assert rr.deliveries == ff.deliveries
+    assert rr.group_finish == ff.group_finish
+    assert rr.started == ff.started and rr.completed == ff.completed
+    assert rr.faults == ff.faults
+    return rr
+
+
+# -- zero-cost when inactive -------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+def test_empty_schedule_is_passthrough(topo, mode):
+    """run(..., faults=FaultSchedule()) takes the clean path: identical
+    result, no FaultReport attached."""
+    cm, tasks, tb = _chain_setup(topo, mode)
+    for sim in (EventSimulator(topo, cm, 0), CompiledSim(topo, cm, 0)):
+        clean = sim.run(tasks, total_blocks=tb)
+        empt = sim.run(tasks, total_blocks=tb, faults=FaultSchedule())
+        assert empt.finish_time == clean.finish_time
+        assert empt.node_finish == clean.node_finish
+        assert empt.faults is None and clean.faults is None
+
+
+# -- the churn matrix: engines agree, delivery verified ----------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("kind", ["link", "node"])
+def test_single_fault_matrix(topo, mode, kind):
+    cm, tasks, tb = _chain_setup(topo, mode)
+    clean = EventSimulator(topo, cm, 0).run(tasks, total_blocks=tb)
+    t_kill = 0.45 * clean.finish_time
+    edges = sorted({(t.src, t.dst) for t in tasks})
+    u, v = edges[len(edges) // 2]
+    if kind == "link":
+        sched = FaultSchedule.kill_edge(topo, u, v, t_kill)
+    else:
+        victim = u if u != 0 else v
+        sched = FaultSchedule.kill_node(victim, t_kill)
+    res = _both(topo, cm, tasks, tb, sched)
+    assert res.faults is not None
+    assert res.faults.events_applied == len(sched.events)
+    check = verify_delivery(topo, sched, res, 0)
+    assert check.ok, (check, res.faults.summary())
+    # blocks may be lost only at nodes the fault partitioned away from the
+    # root (a fat-tree leaf-trunk kill severs its whole leaf group); every
+    # node still reachable gets everything
+    cut = set(check.unreachable)
+    assert all(v in cut for v, _ in res.faults.lost), \
+        (res.faults.lost, check)
+    assert set(res.faults.incomplete) <= cut
+    # no >= clean assertion: a repair detour from a nearer holder can beat
+    # the serialized chain sends it replaced, so overhead may be negative
+    assert res.finish_time > 0.0
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_seeded_random_churn(topo, mode):
+    """Seeded schedules are deterministic and both engines agree on them."""
+    s1 = FaultSchedule.random(topo, seed=7, link_faults=2, node_faults=1,
+                              window=(0.3, 0.7))
+    s2 = FaultSchedule.random(topo, seed=7, link_faults=2, node_faults=1,
+                              window=(0.3, 0.7))
+    assert s1 == s2
+    cm, tasks, tb = _chain_setup(topo, mode)
+    clean = EventSimulator(topo, cm, 0).run(tasks, total_blocks=tb)
+    ev = tuple(type(e)(**{**e.__dict__,
+                          "time": e.time * clean.finish_time})
+               for e in s1.events)
+    sched = FaultSchedule(events=ev)
+    res = _both(topo, cm, tasks, tb, sched)
+    check = verify_delivery(topo, sched, res, 0)
+    assert check.ok, (check, res.faults.summary())
+
+
+# -- in-flight semantics (surgical single-task runs) -------------------------
+
+def _single_send():
+    topo = T.ring(4)
+    cm = ConflictModel(topo, mode=FULL_DUPLEX)
+    tasks = [SendTask(src=0, dst=1, nbytes=1e6, blk=(0, 1), group=0,
+                      priority=(0,), deps=())]
+    ct = cm.compiled()
+    lat, bw = ct.edge_cost((0, 1))
+    dur = lat + 1e6 / bw
+    return topo, cm, tasks, dur
+
+
+def test_in_flight_retry_dies_and_retries():
+    """retry mode: a transient mid-transfer kill aborts the send; it retries
+    after the timeout, suspends while the link is dead, and completes after
+    the heal — one abort, one retry, full restart of the transfer."""
+    topo, cm, tasks, dur = _single_send()
+    link = topo.links((0, 1))[0]
+    heal = 2 * dur
+    sched = FaultSchedule(events=(LinkFault(0.5 * dur, link, heal),),
+                          in_flight=RETRY)
+    res = _both(topo, cm, tasks, 1, sched)
+    assert res.faults.aborted == 1
+    assert res.faults.retries == 1
+    assert res.finish_time == pytest.approx(heal + dur)
+
+
+def test_in_flight_complete_then_die():
+    """complete mode: the in-flight send lands untouched (the fault only
+    affects sends admitted later)."""
+    topo, cm, tasks, dur = _single_send()
+    link = topo.links((0, 1))[0]
+    sched = FaultSchedule(events=(LinkFault(0.5 * dur, link),),
+                          in_flight=COMPLETE)
+    res = _both(topo, cm, tasks, 1, sched)
+    assert res.faults.aborted == 0
+    assert res.finish_time == dur
+
+
+def test_in_flight_complete_but_dst_dead():
+    """complete mode does not resurrect a dead destination: killing the dst
+    node aborts even completes-then-dies sends, and with nobody left to
+    deliver to the task is cancelled without a repair (not 'lost' — lost
+    tracks undeliverable blocks at *surviving* nodes)."""
+    topo, cm, tasks, dur = _single_send()
+    sched = FaultSchedule(events=(NodeFault(0.5 * dur, 1),),
+                          in_flight=COMPLETE)
+    res = _both(topo, cm, tasks, 1, sched)
+    assert res.faults.aborted == 1
+    assert res.faults.dead_nodes == (1,)
+    assert res.faults.cancelled == 1
+    assert res.faults.repair_tasks == 0 and res.faults.lost == ()
+    assert res.completed == 0
+    assert 1 not in res.node_finish
+
+
+# -- partition: lost blocks reported, verifier excludes unreachable ----------
+
+def test_partition_reports_lost():
+    """mesh2d(2,2): killing both links into node 3 cuts it from the root.
+    The planner reports the undeliverable blocks as lost, nothing strands,
+    and the verifier excludes the unreachable node rather than failing."""
+    topo = T.mesh2d(2, 2)
+    cm = ConflictModel(topo, mode=FULL_DUPLEX)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    tasks = pipeline_tasks(pipe, [2e5], 4)
+    tb = 4 * len(pipe.trees)
+    clean = EventSimulator(topo, cm, 0).run(tasks, total_blocks=tb)
+    t_kill = 0.1 * clean.finish_time
+    cut = tuple(l for l in fabric_links(topo)
+                if "3" in l.split(":", 1)[1].replace("->", "-").split("-"))
+    assert len(cut) == 2, cut
+    sched = FaultSchedule(events=tuple(LinkFault(t_kill, l) for l in cut))
+    res = _both(topo, cm, tasks, tb, sched)
+    check = verify_delivery(topo, sched, res, 0)
+    assert check.ok, check
+    assert 3 in check.unreachable
+    assert res.faults.lost != ()
+    assert 3 in res.faults.incomplete
+
+
+# -- higher layers: baselines, pipelines, plans ------------------------------
+
+@pytest.mark.parametrize("name", ["bine", "srda"])
+def test_baseline_under_fault_engines_agree(name):
+    topo = T.mesh2d(4, 4)
+    cm = ConflictModel(topo, mode=FULL_DUPLEX)
+    clean = simulate_baseline(topo, cm, name, 0, 1e6)
+    tasks_edges = sorted({(t.src, t.dst) for t in
+                          __import__("repro.core.baselines",
+                                     fromlist=["BASELINES"])
+                          .BASELINES[name](topo, 0, 1e6)})
+    u, v = tasks_edges[len(tasks_edges) // 2]
+    sched = FaultSchedule.kill_edge(topo, u, v, 0.45 * clean.finish_time)
+    rr = simulate_baseline(topo, cm, name, 0, 1e6, engine="reference",
+                           faults=sched)
+    ff = simulate_baseline(topo, cm, name, 0, 1e6, engine="fast",
+                           faults=sched)
+    assert rr.finish_time == ff.finish_time
+    assert rr.node_finish == ff.node_finish
+    assert rr.faults == ff.faults
+    check = verify_delivery(topo, sched, rr, 0)
+    assert check.ok, check
+
+
+def test_simulate_pipeline_surfaces_faults():
+    topo = T.mesh2d(4, 4)
+    cm = ConflictModel(topo, mode=FULL_DUPLEX)
+    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    t0, res0, _ = simulate_pipeline(topo, cm, pipe, 8e5, 6, 0)
+    edges = sorted({(e[0], e[1]) for tr in pipe.trees for e in tr.edges})
+    u, v = edges[len(edges) // 2]
+    sched = FaultSchedule.kill_edge(topo, u, v, 0.45 * t0)
+    for eng in ("reference", "fast"):
+        tf, resf, _ = simulate_pipeline(topo, cm, pipe, 8e5, 6, 0,
+                                        engine=eng, faults=sched)
+        assert resf.faults is not None
+        assert tf >= t0
+        assert verify_delivery(topo, sched, resf, 0).ok
+
+
+def test_broadcast_time_reports_degradation():
+    topo = T.mesh2d(4, 4)
+    plan = build_plan(topo, root=0)
+    t0, info0 = broadcast_time(plan, 1e6, num_groups=8)
+    sched = FaultSchedule.random(topo, seed=3, link_faults=1,
+                                 window=(0.2, 0.6))
+    ev = tuple(LinkFault(e.time * t0, e.link, e.heal_time)
+               for e in sched.events)
+    tf, info = broadcast_time(plan, 1e6, num_groups=8,
+                              faults=FaultSchedule(events=ev))
+    assert info["t_fault_free"] == t0
+    assert info["fault_overhead"] == tf - t0
+    assert info["fault_report"].events_applied == 1
+    assert "repair_latency" in info and "retries" in info

@@ -371,3 +371,52 @@ def test_baseline_store_persists_even_after_memo_hit(tmp_path, mesh):
     simulate_baseline(mesh, cm, "glf", 0, 1.5e6, store=store)
     key = BaselineKey.for_topology(mesh, "glf", 0, 1.5e6, mode=FULL_DUPLEX)
     assert os.path.exists(store.path_for_baseline(key))
+
+
+# -- corruption robustness (faults PR): a killed run must not poison later
+# -- runs with a half-written or garbage artifact ---------------------------
+
+def test_truncated_artifact_raises_stale(tmp_path, mesh, mesh_plan):
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    path = store.store(key, mesh_plan)
+    with open(path, "rb") as fh:
+        blob = fh.read()
+    with open(path, "wb") as fh:
+        fh.write(blob[: len(blob) // 2])        # simulate a killed writer
+    with pytest.raises(StalePlanError):
+        store.load(key)
+
+
+def test_garbage_artifact_raises_stale(tmp_path, mesh):
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    path = store.path_for(key)
+    with open(path, "wb") as fh:
+        fh.write(b"\x00garbage not a pickle\xff" * 64)
+    with pytest.raises(StalePlanError):
+        store.load(key)
+    with pytest.raises(StalePlanError):
+        PlanStore.load_path(path, key)
+
+
+def test_store_writes_are_atomic(tmp_path, mesh, mesh_plan):
+    """Writes go through temp-file + os.replace: after a successful store no
+    intermediate .tmp files remain, and the artifact loads cleanly."""
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    store.store(key, mesh_plan)
+    leftovers = [f for f in os.listdir(str(tmp_path)) if f.endswith(".tmp")]
+    assert leftovers == []
+    store.load(key)                              # no exception
+
+
+def test_get_or_build_recovers_from_corrupt_artifact(tmp_path, mesh):
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    with open(store.path_for(key), "wb") as fh:
+        fh.write(b"poisoned")
+    plan, _, was_cached = store.get_or_build(mesh, root=0)
+    assert not was_cached                        # corrupt blob = cache miss
+    loaded, _ = store.load(key)                  # overwritten with valid blob
+    assert loaded.root == 0

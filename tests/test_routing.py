@@ -351,3 +351,32 @@ def test_task_list_pickle_strips_and_rebinds_resources():
     assert got.deliveries == want.deliveries
     assert got.node_finish == want.node_finish
     assert restored.seg == ctl.seg
+
+
+# -- disconnected pairs (faults PR): partitioned fabrics must fail loudly ----
+
+def test_unreachable_pairs_raise():
+    """On a partitioned graph, path/next_hop/hops raise ``Unreachable`` with
+    the offending pair — no raw -1 sentinels escaping into hop loops."""
+    from repro.core.routing import Unreachable
+
+    # two disjoint components: {0, 1} and {2, 3}
+    nht = NextHopTable(4, {0: [1], 1: [0], 2: [3], 3: [2]})
+    assert nht.hops(0, 1) == 1
+    assert nht.path(2, 3) == (2, 3)
+    for fn in (nht.hops, nht.path, nht.next_hop):
+        with pytest.raises(Unreachable) as ei:
+            fn(0, 2)
+        assert ei.value.src == 0 and ei.value.dst == 2
+        assert "0" in str(ei.value) and "2" in str(ei.value)
+    # the raw dist matrix keeps the documented -1 for vectorized consumers
+    assert nht.dist[0, 2] == -1
+    assert nht.reachable(0, 1)
+    assert not nht.reachable(1, 3)
+    assert isinstance(nht.reachable(1, 3), bool)
+
+
+def test_unreachable_same_node_still_fine():
+    nht = NextHopTable(3, {0: [1], 1: [0], 2: []})
+    assert nht.hops(2, 2) == 0
+    assert nht.path(2, 2) == (2,)
