@@ -6,7 +6,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # target, so ROADMAP's tier-1 command and CI cannot drift.
 TIER1_DESELECTS = $(shell awk '/^[^\#]/ {printf "--deselect %s ", $$1}' tests/tier1-deselect.txt)
 
-.PHONY: test test-fast tier1 bench bench-smoke bench-check bench-tables
+.PHONY: test test-fast tier1 bench bench-smoke bench-check bench-tables serve-smoke
 
 test:            ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -34,3 +34,6 @@ bench-check:     ## re-gate an existing BENCH_simbench.json without re-running
 
 bench-tables:    ## Tables B1-B8 full grid, n=128..1024 (plans via PlanStore)
 	$(PY) -m benchmarks.run --full --only broadcast
+
+serve-smoke:     ## plan-service smoke: build once, serve 100 symmetric-root requests warm
+	$(PY) -m repro.launch.planserver --smoke

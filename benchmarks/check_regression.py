@@ -15,9 +15,15 @@ Cells:
   baseline           routed-baseline raw loop, geometric mean over algorithms
                      (vs the seed-era generic ``CompiledSim.run`` path)
   baseline_<algo>    the same, per algorithm (srda / pipeline / bine / glf)
+  plan_cache_<topo>  symmetry-orbit pack assembly speedup vs per-root builds
+  plan_cache_hit_rate  warm hit rate of the PlanServer request stream
+  build_plan_seconds   wall time of one plan build — gated as a *ceiling*
 
-A floor listed in the floors file but missing from the JSON fails too — a
-silently skipped cell must not read as "no regression".
+A floor value is either a bare number (a minimum, the historical form) or
+``{"min": x}`` / ``{"max": x}`` — ``max`` turns the cell into a ceiling,
+for wall-time cells where bigger is a regression. A floor listed in the
+floors file but missing from the JSON fails too — a silently skipped cell
+must not read as "no regression".
 
 Usage:
   python -m benchmarks.check_regression [BENCH_simbench.json]
@@ -60,7 +66,23 @@ def extract_cells(records) -> dict:
             cells["baseline"] = rec["speedup"]
         elif name == "baseline":
             cells[f"baseline_{rec['algo']}"] = rec["speedup"]
+        elif name == "plan_cache":
+            cells[f"plan_cache_{rec['topo']}"] = rec["speedup"]
+        elif name == "plan_cache_hit_rate":
+            cells["plan_cache_hit_rate"] = rec["hit_rate"]
+        elif name == "build_plan":
+            cells["build_plan_seconds"] = rec["seconds"]
     return cells
+
+
+def _bound(spec):
+    """Normalize a floor spec: bare number => minimum; {"min": x} / {"max":
+    x} choose the direction. Returns (threshold, is_ceiling)."""
+    if isinstance(spec, dict):
+        if "max" in spec:
+            return float(spec["max"]), True
+        return float(spec["min"]), False
+    return float(spec), False
 
 
 def check(data: dict, floors_by_profile: dict, overrides: dict) -> int:
@@ -76,18 +98,21 @@ def check(data: dict, floors_by_profile: dict, overrides: dict) -> int:
     cells = extract_cells(data.get("records", []))
     failed = False
     for cell in sorted(floors):
-        floor = floors[cell]
+        bound, ceiling = _bound(floors[cell])
+        kind = "ceiling" if ceiling else "floor"
         got = cells.get(cell)
         if got is None:
             print(f"FAIL {cell}: cell missing from bench results "
-                  f"(floor {floor}x) — did the bench run it?")
+                  f"({kind} {bound}) — did the bench run it?")
             failed = True
-        elif got < floor:
-            print(f"FAIL {cell}: {got:.2f}x < floor {floor}x "
+        elif (got > bound) if ceiling else (got < bound):
+            op = ">" if ceiling else "<"
+            print(f"FAIL {cell}: {got:.2f} {op} {kind} {bound} "
                   f"({profile} profile)")
             failed = True
         else:
-            print(f"ok   {cell}: {got:.2f}x >= floor {floor}x")
+            op = "<=" if ceiling else ">="
+            print(f"ok   {cell}: {got:.2f} {op} {kind} {bound}")
     return 1 if failed else 0
 
 

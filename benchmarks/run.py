@@ -244,7 +244,14 @@ def main(argv=None) -> None:
                          "cached via PlanStore)")
     ap.add_argument("--only", default=None,
                     help="comma list of bench names to run")
+    ap.add_argument("--prune", action="store_true",
+                    help="delete stale plan artifacts (old schema, leftover "
+                         ".tmp, renamed files) before running; a schema bump "
+                         "otherwise leaves dead pickles behind forever")
     args = ap.parse_args(argv)
+    if args.prune:
+        removed = plan_store().prune()
+        print(f"# pruned {len(removed)} stale artifact(s)", file=sys.stderr)
     sizes_arg = args.sizes or ("128,256,512,1024" if args.full else "128")
     messages_arg = args.messages or ("all" if args.full
                                      else "64e3,1e6,16e6,128e6")

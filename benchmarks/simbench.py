@@ -28,7 +28,21 @@ so the perf trajectory is tracked across PRs (uploaded as a CI artifact by
                  the full non-analytic run to 1e-9
   build_plan     wall time of bbs.build_plan per topology with the fast
                  engine (the end-to-end "plan once offline" cost; the m=1
-                 fill time now comes from an exact isolated group-0 replay)
+                 fill time now comes from an exact isolated group-0 replay).
+                 Gated as a *ceiling* (build_plan_seconds) so plan builds
+                 cannot silently balloon
+  plan_cache     symmetry-orbit plan sharing: assembling the all-roots
+                 packed artifact through orbit canonicalization + witness
+                 relabeling (k builds for k orbits) vs the per-root build
+                 cost sampled and extrapolated to all n roots. Relabeled
+                 plans are spot-asserted to answer identically to fresh
+                 builds before the speedup is reported. Two fabrics per
+                 profile: mesh2d (D4 symmetry — n/8-ish orbits bound the
+                 win) and torus2d (vertex-transitive — one orbit, the
+                 paper-table regime where sharing collapses the whole
+                 build). Also serves a root-symmetric request stream
+                 through ``repro.launch.planserver.PlanServer`` and
+                 records the warm-cache hit rate (gated >= 0.9)
 
 Usage:
   PYTHONPATH=src python -m benchmarks.simbench            # full (n=256)
@@ -541,6 +555,87 @@ def bench_build_plan(topo_name: str, n: int) -> None:
             cycle_hints=hints)
 
 
+def bench_plan_cache(n: int, requests: int = 100) -> None:
+    """Symmetry-orbit plan sharing + the warm plan service (see module
+    docstring). Speedup = extrapolated per-root build cost over the
+    measured orbit-shared pack assembly (builds + relabels + pickling)."""
+    import tempfile
+
+    from repro.core import topology as T
+    from repro.core.bbs import broadcast_time, build_plan
+    from repro.core.planstore import PlanStore
+    from repro.launch.planserver import PlanServer
+
+    server_topo = None
+    for topo_name in ("mesh2d", "torus2d"):
+        topo = T.by_name(topo_name, n)
+        nn = topo.num_nodes
+        orbits = topo.automorphisms().orbits()
+        k = orbits.num_orbits
+
+        # per-root cost: sample a few spread-out roots, extrapolate to n
+        sample = sorted({0, nn // 3, (2 * nn) // 3})
+        per = []
+        for r in sample:
+            t0 = time.perf_counter()
+            build_plan(topo, root=r)
+            per.append(time.perf_counter() - t0)
+        per_root_est = sum(per) / len(per) * nn
+
+        # orbit-shared: the packed artifact over every root (k builds,
+        # n - k witness relabels, one pickle to disk)
+        with tempfile.TemporaryDirectory() as d:
+            store = PlanStore(d)
+            t0 = time.perf_counter()
+            plans, _, _ = store.get_or_build_packed(topo, roots=range(nn))
+            orbit_wall = time.perf_counter() - t0
+        speedup = per_root_est / orbit_wall
+
+        # relabeled plans must answer exactly like fresh builds
+        probe_root = nn - 1
+        fresh = build_plan(topo, root=probe_root)
+        for M in (1e6, 16e6):
+            tp, _ = broadcast_time(plans[probe_root], M)
+            tf, _ = broadcast_time(fresh, M)
+            assert tp == tf, \
+                f"plan_cache {topo_name}: relabeled plan diverged at " \
+                f"root {probe_root}, M={M:g} ({tp} != {tf})"
+
+        tag = f"{topo_name}_{nn}"
+        print(f"plan_cache_per_root_est_{tag},{per_root_est * 1e6:.0f},"
+              f"us for {nn} roots (sampled {len(sample)})")
+        print(f"plan_cache_orbit_{tag},{orbit_wall * 1e6:.0f},"
+              f"us ({k} orbit build(s) + {nn - k} relabels)")
+        print(f"plan_cache_speedup_{tag},{speedup:.2f},x")
+        _record("plan_cache", "fast", topo_name, nn, 0, 0.0, speedup,
+                orbits=k, builds=k, relabels=nn - k,
+                per_root_est_s=round(per_root_est, 4),
+                orbit_wall_s=round(orbit_wall, 4))
+        if topo_name == "torus2d":
+            server_topo = topo
+
+    # warm plan service over the vertex-transitive fabric: a request
+    # stream cycling through every (symmetric) root must stay warm
+    server = PlanServer()
+    fp = server.register(server_topo)
+    nn = server_topo.num_nodes
+    sizes = (64e3, 1e6, 4e6, 16e6)
+    t0 = time.perf_counter()
+    for i in range(requests):
+        server.request(fp, i % nn, sizes[i % len(sizes)])
+    serve_wall = time.perf_counter() - t0
+    st = server.stats
+    print(f"plan_cache_hit_rate_torus2d_{nn},{st.hit_rate:.3f},"
+          f"{requests} requests: {st.builds} build(s) "
+          f"{st.relabels} relabel(s) {st.l1_hits} L1 hits "
+          f"({serve_wall:.2f}s wall)")
+    _record("plan_cache_hit_rate", "fast", "torus2d", nn, 0, 0.0, 1.0,
+            hit_rate=round(st.hit_rate, 4), requests=requests,
+            builds=st.builds, relabels=st.relabels, l1_hits=st.l1_hits,
+            build_seconds=round(st.build_seconds, 4),
+            relabel_seconds=round(st.relabel_seconds, 4))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -562,6 +657,7 @@ def main(argv=None) -> int:
     bench_churn(args.topo, 64 if args.smoke else n, args.message)
     bench_cycle(args.repeats)
     bench_build_plan(args.topo, 64 if args.smoke else 128)
+    bench_plan_cache(64 if args.smoke else 256)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "simbench",

@@ -96,6 +96,15 @@ class BBSPlan:
             out.append((c, m))
         return out
 
+    def relabel(self, perm: Sequence[int]) -> "BBSPlan":
+        """The image of this plan under a vertex automorphism: same measured
+        ratios and cycle hints, trees/rounds/LP renamed, routed paths pinned
+        so the relabeled schedule replays bit-identically (same T(m),
+        ``node_finish[perm[v]] == node_finish[v]``) — see
+        ``repro.core.symmetry.relabel_plan``. O(plan size), no rebuild."""
+        from repro.core.symmetry import relabel_plan
+        return relabel_plan(self, perm)
+
 
 def _candidate_trees(topo: Topology, sol: SaturationSolution, root: int,
                      mode: str = FULL_DUPLEX,

@@ -494,8 +494,16 @@ class CompiledSim:
         durs: List[float] = []
         for t in tasks:
             e = (t.src, t.dst)
-            res_ids.append(idx.edge_ids(e))
-            lat, bw = idx.edge_cost(e)
+            rt = getattr(t, "route", None)
+            if rt is not None:
+                # pinned route (relabeled plans): resolve resources/cost from
+                # the override, matching the reference loop bit for bit
+                res_ids.append(tuple(
+                    idx.intern(r) for r in idx.cm.resources(e, links=rt[0])))
+                lat, bw = rt[1], rt[2]
+            else:
+                res_ids.append(idx.edge_ids(e))
+                lat, bw = idx.edge_cost(e)
             durs.append(lat + t.nbytes / bw)
         caps = idx.caps
         busy = [0] * len(caps)

@@ -27,7 +27,7 @@ enforce at most one active edge per resource at any instant.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.routing import CompiledTopology
 from repro.core.topology import Edge, Topology
@@ -69,9 +69,15 @@ class ConflictModel:
         state.pop("_compiled", None)
         return state
 
-    def resources(self, e: Edge) -> Tuple[Resource, ...]:
+    def resources(self, e: Edge,
+                  links: Optional[Sequence[str]] = None) -> Tuple[Resource, ...]:
+        """Resources occupied by a transfer on edge e. ``links`` overrides the
+        topology's natural physical route (pinned routes on relabeled plans —
+        see ``repro.core.symmetry``); port/node resources are unaffected."""
         i, j = e
-        links = tuple(("link", l) for l in self.topo.links(e))
+        if links is None:
+            links = self.topo.links(e)
+        links = tuple(("link", l) for l in links)
         if self.mode == FULL_DUPLEX:
             return (("send", i), ("recv", j)) + links
         if self.mode == HALF_DUPLEX:
@@ -96,13 +102,22 @@ class ConflictModel:
         ct = self.compiled()
         return not ct.edge_unit_ids(e1).isdisjoint(ct.edge_unit_ids(e2))
 
-    def compatible(self, edges: Sequence[Edge]) -> bool:
-        """True iff all edges can be active simultaneously (a valid round)."""
+    def compatible(self, edges: Sequence[Edge],
+                   routes: Optional[Dict[Edge, Tuple]] = None) -> bool:
+        """True iff all edges can be active simultaneously (a valid round).
+        ``routes`` maps edges to pinned (links, latency, bandwidth) overrides
+        (``Pipeline.routes``); overridden edges count their pinned links."""
         ct = self.compiled()
         caps = ct.caps
         count: Dict[int, int] = {}
         for e in edges:
-            for rid in ct.edge_ids(e):
+            rt = routes.get(e) if routes else None
+            if rt is None:
+                rids = ct.edge_ids(e)
+            else:
+                rids = tuple(ct.intern(r)
+                             for r in self.resources(e, links=rt[0]))
+            for rid in rids:
                 c = count.get(rid, 0) + 1
                 if c > caps[rid]:
                     return False

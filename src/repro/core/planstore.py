@@ -58,7 +58,13 @@ from repro.core.topology import Topology
 #   3 — round-batched engine: Candidate records the occupancy-cycle scan
 #       hint (``repro.core.fastsim.CycleInfo``), exact isolated group-0
 #       probe replay, packed multi-root artifacts
-SCHEMA_VERSION = 3
+#   4 — symmetry-orbit plan sharing: packed artifacts store one canonical
+#       plan per vertex orbit plus permutation witnesses (non-canonical
+#       roots relabel on load); ``Pipeline``/``FlatTasks``/``SendTask``/
+#       ``CompiledTaskList`` grew route-override columns; the hierarchical
+#       candidate rule became local-index-preserving (new fingerprints for
+#       fat-tree/dragonfly fabrics)
+SCHEMA_VERSION = 4
 
 _MAGIC = "bbs-plan"
 _MAGIC_PACKED = "bbs-plan-pack"
@@ -316,12 +322,18 @@ class PlanStore:
         return os.path.join(self.root_dir, key.filename())
 
     def store_packed(self, key: PackedPlanKey, plans: dict,
-                     build_seconds: float = 0.0) -> str:
+                     build_seconds: float = 0.0,
+                     witnesses: Optional[dict] = None) -> str:
         """Persist ``plans`` (root -> BBSPlan) as one packed artifact.
 
         All plans must belong to the keyed fabric/mode; the shared object
         graph (topology, conflict model, templates) is pickled once for the
-        whole file."""
+        whole file. With orbit sharing (``get_or_build_packed``) ``plans``
+        holds only the canonical (orbit-representative) builds and
+        ``witnesses`` maps every other served root to ``(canonical_root,
+        permutation)`` — the automorphism that relabels the canonical plan
+        onto that root, recorded at build time so loads replay the exact
+        same relabeling."""
         for plan in plans.values():
             _materialize(plan)
         blob = {
@@ -338,6 +350,7 @@ class PlanStore:
                 "created": time.time(),
             },
             "plans": dict(plans),
+            "witnesses": dict(witnesses or {}),
         }
         payload = pickle.dumps(blob)
         os.makedirs(self.root_dir, exist_ok=True)
@@ -383,7 +396,9 @@ class PlanStore:
                     f"requested topology/key has {want!r}; the stored plans "
                     f"belong to a different fabric or build and must not be "
                     f"reused")
-        return blob["plans"], dict(header, **blob.get("meta", {}))
+        meta = dict(header, **blob.get("meta", {}))
+        meta["witnesses"] = dict(blob.get("witnesses", {}))
+        return blob["plans"], meta
 
     def get_or_build_packed(self, topo: Topology, roots: Sequence[int],
                             mode: str = FULL_DUPLEX,
@@ -391,23 +406,58 @@ class PlanStore:
                             ) -> Tuple[dict, float, int]:
         """Return (plans-by-root for ``roots``, build_seconds, cached_count).
 
-        Loads the fabric's packed artifact when valid, builds only the
-        missing roots (one shared ``ConflictModel`` across all of them, so
-        the artifact's object graph is deduplicated), and re-stores the
-        artifact when it grew. Stale or unreadable artifacts are rebuilt in
-        place like per-root ones."""
+        Orbit-shared: each requested root is first canonicalized through
+        the fabric's recorded automorphism group
+        (``Topology.automorphisms()``). Only the missing *canonical* roots
+        run the full ``builder`` (LP + probe + cycle scan, with one shared
+        ``ConflictModel`` across all of them); every other root's plan is
+        produced by relabeling its orbit representative through a
+        permutation witness (``BBSPlan.relabel``), which replays
+        bit-identically in the batched engine at O(tasks) cost. The packed
+        artifact stores only the canonical plans plus the witnesses used,
+        so a fabric with k orbits costs k builds no matter how many roots
+        are served. ``cached_count`` counts requested roots served without
+        invoking ``builder`` (loaded directly or relabeled from an
+        already-present representative). Stale or unreadable artifacts are
+        rebuilt in place like per-root ones."""
         key = PackedPlanKey.for_topology(topo, mode=mode)
         memo_key = key.digest()
-        plans, build_s = self._memo.get(memo_key, ({}, 0.0))
-        if not plans:
+        state = self._memo.get(memo_key)
+        if state is None:
             try:
                 plans, meta = self.load_packed(key)
                 build_s = float(meta.get("build_seconds", 0.0))
+                witnesses = {r: (c, tuple(p))
+                             for r, (c, p) in meta["witnesses"].items()}
             except (FileNotFoundError, StalePlanError):
-                plans = {}
-        cached = sum(1 for r in roots if r in plans)
-        missing = [r for r in roots if r not in plans]
-        if missing:
+                plans, build_s, witnesses = {}, 0.0, {}
+            # ``plans`` holds canonical builds (the only thing persisted);
+            # ``derived`` memoizes relabeled plans per process so repeated
+            # requests for the same non-canonical root relabel once
+            state = {"plans": dict(plans), "build_s": build_s,
+                     "witnesses": witnesses, "derived": {}}
+            self._memo[memo_key] = state
+        plans, witnesses = state["plans"], state["witnesses"]
+        derived = state["derived"]
+
+        aut = topo.automorphisms()
+        cached = 0
+        need_build = []
+        for r in roots:
+            if r in plans or r in derived:
+                cached += 1
+                continue
+            if r not in witnesses:
+                canon = aut.canonical_root(r)
+                if canon != r:
+                    witnesses[r] = (canon, aut.witness(r))
+            canon = witnesses[r][0] if r in witnesses else r
+            if canon in plans:
+                cached += 1          # representative present: relabel only
+            elif canon not in need_build:
+                need_build.append(canon)
+
+        if need_build:
             if builder is None:
                 from repro.core.bbs import build_plan
                 builder = build_plan
@@ -427,15 +477,92 @@ class PlanStore:
             except (TypeError, ValueError):
                 pass
             t0 = time.perf_counter()
-            for r in missing:
+            for r in need_build:
                 if takes_cm:
                     plans[r] = builder(topo_b, root=r, mode=mode, cm=cm)
                 else:
                     plans[r] = builder(topo_b, root=r, mode=mode)
-            build_s += time.perf_counter() - t0
-            self.store_packed(key, plans, build_s)
-        self._memo[memo_key] = (plans, build_s)
-        return {r: plans[r] for r in roots}, build_s, cached
+            state["build_s"] += time.perf_counter() - t0
+            self.store_packed(key, plans, state["build_s"], witnesses)
+
+        for r in roots:
+            if r not in plans and r not in derived:
+                canon, perm = witnesses[r]
+                derived[r] = plans[canon].relabel(perm)
+        out = {r: plans.get(r, derived.get(r)) for r in roots}
+        return out, state["build_s"], cached
+
+    # -- maintenance ----------------------------------------------------------
+
+    def prune(self) -> list:
+        """Delete stale artifacts from the store directory; returns the
+        removed paths.
+
+        Removes leftover ``.pkl.tmp`` files from interrupted writes,
+        unreadable pickles, files that are not PlanStore artifacts, artifacts
+        from a different ``SCHEMA_VERSION``, and artifacts whose filename
+        does not match the name recomputed from their own embedded header —
+        renamed or drifted files address nothing and would otherwise rot in
+        the directory forever. Only ``*.pkl`` / ``*.pkl.tmp`` files are
+        considered; everything else in the directory is left alone."""
+        removed = []
+        if not os.path.isdir(self.root_dir):
+            return removed
+        for name in sorted(os.listdir(self.root_dir)):
+            path = os.path.join(self.root_dir, name)
+            if not os.path.isfile(path):
+                continue
+            if name.endswith(".pkl.tmp"):
+                os.remove(path)
+                removed.append(path)
+                continue
+            if not name.endswith(".pkl"):
+                continue
+            if self._expected_filename(path) != name:
+                os.remove(path)
+                removed.append(path)
+        return removed
+
+    @staticmethod
+    def _expected_filename(path: str) -> Optional[str]:
+        """Recompute the canonical filename from an artifact's own header;
+        ``None`` when the file is unreadable, foreign, or wrong-schema."""
+        try:
+            with open(path, "rb") as f:
+                blob = pickle.load(f)
+        except Exception:
+            return None
+        if not isinstance(blob, dict):
+            return None
+        header = blob.get("header")
+        if not isinstance(header, dict):
+            return None
+        try:
+            if header["schema"] != SCHEMA_VERSION:
+                return None
+            magic = blob.get("magic")
+            if magic == _MAGIC:
+                key = PlanKey(fingerprint=header["fingerprint"],
+                              root=header["root"], mode=header["mode"],
+                              schema=header["schema"],
+                              topo_name=header.get("topo_name", ""))
+            elif magic == _MAGIC_PACKED:
+                key = PackedPlanKey(fingerprint=header["fingerprint"],
+                                    mode=header["mode"],
+                                    schema=header["schema"],
+                                    topo_name=header.get("topo_name", ""))
+            elif magic == _MAGIC_BASELINE:
+                key = BaselineKey(fingerprint=header["fingerprint"],
+                                  mode=header["mode"], algo=header["algo"],
+                                  root=header["root"],
+                                  nbytes=header["nbytes"],
+                                  schema=header["schema"],
+                                  topo_name=header.get("topo_name", ""))
+            else:
+                return None
+        except KeyError:
+            return None
+        return key.filename()
 
     # -- lowered baseline task lists ------------------------------------------
 

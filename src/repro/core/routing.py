@@ -364,7 +364,19 @@ class CompiledTemplate:
         for pos, t in enumerate(order):
             rank[t] = pos
         self.rank = rank
-        self.res_ids = [ct.edge_ids((u, v)) for u, v in zip(ft.src, ft.dst)]
+        routes = getattr(ft, "route", None)
+        if routes is None:
+            self.res_ids = [ct.edge_ids((u, v))
+                            for u, v in zip(ft.src, ft.dst)]
+        else:
+            # pinned per-task routes (relabeled plans): resolve resources
+            # from the override links; interning stays on the shared tables
+            # but the Edge-keyed caches are left untouched
+            self.res_ids = [
+                ct.edge_ids((u, v)) if rt is None else
+                tuple(ct.intern(r)
+                      for r in ct.cm.resources((u, v), links=rt[0]))
+                for u, v, rt in zip(ft.src, ft.dst, routes)]
         indptr = np.zeros(T + 1, dtype=np.int64)
         for i, ids in enumerate(self.res_ids):
             indptr[i + 1] = indptr[i] + len(ids)
@@ -384,7 +396,11 @@ class CompiledTemplate:
         lat = np.empty(T)
         bw = np.empty(T)
         for i, (u, v) in enumerate(zip(ft.src, ft.dst)):
-            lat[i], bw[i] = ct.edge_cost((u, v))
+            rt = routes[i] if routes is not None else None
+            if rt is None:
+                lat[i], bw[i] = ct.edge_cost((u, v))
+            else:
+                lat[i], bw[i] = rt[1], rt[2]
         self.lat = lat
         self.bw = bw
 
@@ -460,8 +476,8 @@ class CompiledTaskList:
     __slots__ = ("n", "total_blocks", "num_nodes", "rank", "src",
                  "dst", "nbytes", "durs", "blks", "spans", "all_fresh",
                  "cover_bad", "grps", "has_groups", "deps", "dep_n",
-                 "children", "seg", "res_ids", "res_indptr", "res_flat",
-                 "_tpl")
+                 "children", "seg", "routes", "res_ids", "res_indptr",
+                 "res_flat", "_tpl")
 
     def __init__(self, ct: CompiledTopology, tasks: Sequence["SendTask"],
                  total_blocks: Optional[int] = None,
@@ -484,13 +500,18 @@ class CompiledTaskList:
         blks: List[Tuple[int, int]] = []
         grps: List[Optional[int]] = []
         deps: List[Tuple[int, ...]] = []
+        routes: List = []
         ecache: Dict["Edge", Tuple[float, float]] = {}
         for t in tasks:
             e = (t.src, t.dst)
-            ent = ecache.get(e)
-            if ent is None:
-                ent = ecache[e] = ct.edge_cost(e)
-            lat, bw = ent
+            rt = getattr(t, "route", None)
+            if rt is not None:
+                lat, bw = rt[1], rt[2]
+            else:
+                ent = ecache.get(e)
+                if ent is None:
+                    ent = ecache[e] = ct.edge_cost(e)
+                lat, bw = ent
             src.append(t.src)
             dst.append(t.dst)
             nbytes.append(t.nbytes)
@@ -498,6 +519,10 @@ class CompiledTaskList:
             blks.append(t.blk)
             grps.append(t.group)
             deps.append(tuple(t.deps))
+            routes.append(rt)
+        # structural per-task route overrides (None for the common case);
+        # persisted with the lowering so bind() re-derives matching ids
+        self.routes = routes if any(r is not None for r in routes) else None
         self.src = src
         self.dst = dst
         self.nbytes = nbytes
@@ -590,7 +615,13 @@ class CompiledTaskList:
         if self.res_ids is not None:
             return
         edge_ids = ct.edge_ids
-        res_ids = [edge_ids(e) for e in zip(self.src, self.dst)]
+        if self.routes is None:
+            res_ids = [edge_ids(e) for e in zip(self.src, self.dst)]
+        else:
+            res_ids = [
+                edge_ids(e) if rt is None else
+                tuple(ct.intern(r) for r in ct.cm.resources(e, links=rt[0]))
+                for e, rt in zip(zip(self.src, self.dst), self.routes)]
         lens = np.asarray([len(ids) for ids in res_ids], dtype=np.int64)
         indptr = np.zeros(self.n + 1, dtype=np.int64)
         np.cumsum(lens, out=indptr[1:])

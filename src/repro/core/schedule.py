@@ -35,6 +35,9 @@ class FlatTasks:
     depth: List[int]
     round_ix: List[int]
     dep: List[int]     # template index of the in-group dependency, -1 if none
+    # per-task route override (links, latency, bandwidth) or None; the list
+    # itself is None for the common case of a pipeline without overrides
+    route: Optional[List[Optional[Tuple[Tuple[str, ...], float, float]]]] = None
 
     def __len__(self) -> int:
         return len(self.src)
@@ -42,11 +45,19 @@ class FlatTasks:
 
 @dataclasses.dataclass
 class Pipeline:
-    """Cyclic broadcast schedule: rounds of simultaneous (tree, edge) sends."""
+    """Cyclic broadcast schedule: rounds of simultaneous (tree, edge) sends.
+
+    ``routes`` optionally pins per-edge physical routes (links, latency,
+    bandwidth) that differ from the topology's natural resolution. Symmetry
+    relabeling uses this (``repro.core.symmetry``): the image of a BFS-routed
+    path under a fabric automorphism is an equal-cost physical route, but not
+    necessarily the one the router's tie-breaks would pick — pinning it keeps
+    the relabeled schedule bit-identical to the original."""
 
     trees: List[Arborescence]
     rounds: List[List[Task]]                 # d rounds
     cm: ConflictModel
+    routes: Optional[Dict[Edge, Tuple[Tuple[str, ...], float, float]]] = None
 
     @property
     def d(self) -> int:
@@ -88,9 +99,13 @@ class Pipeline:
                     assert dep is not None and dep != i, \
                         f"no delivery of tree {k} to node {u}"
                     deps.append(dep)
+            routes = getattr(self, "routes", None)
+            route = None
+            if routes:
+                route = [routes.get((u, v)) for u, v in zip(srcs, dsts)]
             ft = self._flat_tasks = FlatTasks(
                 tree=tree_ix, src=srcs, dst=dsts, depth=depths,
-                round_ix=round_ix, dep=deps)
+                round_ix=round_ix, dep=deps, route=route)
         return ft
 
     def compiled_template(self):
@@ -108,8 +123,9 @@ class Pipeline:
 
     def validate(self) -> None:
         seen: Dict[Tuple[int, Edge], bool] = {}
+        routes = getattr(self, "routes", None)
         for r in self.rounds:
-            assert self.cm.compatible([t.edge for t in r]), \
+            assert self.cm.compatible([t.edge for t in r], routes=routes), \
                 "round contains conflicting edges"
             for t in r:
                 key = (t.tree, t.edge)

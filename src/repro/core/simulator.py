@@ -67,6 +67,10 @@ class SendTask:
     deps: Tuple[int, ...] = ()
     blk: Tuple[int, int] = (0, 1)     # [lo, hi) message blocks carried
     group: Optional[int] = None       # pipeline group tag (for Δ measurement)
+    # pinned physical route (links, latency, bandwidth) overriding the
+    # topology's natural resolution — set by relabeled plans whose routed
+    # paths must keep the original conflict structure (repro.core.symmetry)
+    route: Optional[Tuple[Tuple[str, ...], float, float]] = None
 
 
 @dataclasses.dataclass
@@ -152,7 +156,9 @@ class EventSimulator:
         caps: Dict[Hashable, int] = {}
         res_wait: Dict[Hashable, List[int]] = {}
         ready: List[Tuple[int, int]] = []
-        resources = [ct.resources((t.src, t.dst)) for t in tasks]
+        resources = [cm.resources((t.src, t.dst), links=t.route[0])
+                     if t.route is not None
+                     else ct.resources((t.src, t.dst)) for t in tasks]
         for rs in resources:
             for r in rs:
                 if r not in caps:
@@ -191,7 +197,10 @@ class EventSimulator:
                     continue
                 for r in resources[i]:
                     busy[r] = busy.get(r, 0) + 1
-                lat, bw = ct.edge_cost((t.src, t.dst))
+                if t.route is not None:
+                    lat, bw = t.route[1], t.route[2]
+                else:
+                    lat, bw = ct.edge_cost((t.src, t.dst))
                 dur = lat + t.nbytes / bw
                 heapq.heappush(events, (now + dur, seq, i))
                 seq += 1
@@ -273,7 +282,11 @@ class EventSimulator:
         ctrl, ctrl_seq = F.control_heap(faults)
         retry_mode = faults.in_flight == F.RETRY
 
-        resources = [ct.resources((t.src, t.dst)) for t in tasks]
+        routes = [getattr(t, "route", None) for t in tasks]
+        resources = [cm.resources((t.src, t.dst), links=rt[0])
+                     if rt is not None
+                     else ct.resources((t.src, t.dst))
+                     for t, rt in zip(tasks, routes)]
         caps: Dict[Hashable, int] = {}
         for rs in resources:
             for r in rs:
@@ -333,7 +346,11 @@ class EventSimulator:
                     continue
                 for r in resources[i]:
                     busy[r] = busy.get(r, 0) + 1
-                lat, bw = ct.edge_cost((src[i], dst[i]))
+                rt = routes[i] if i < len(routes) else None
+                if rt is not None:
+                    lat, bw = rt[1], rt[2]
+                else:
+                    lat, bw = ct.edge_cost((src[i], dst[i]))
                 dur = lat + nbytes[i] / bw
                 heapq.heappush(events, (now + dur, seq, i))
                 seq += 1
@@ -497,6 +514,7 @@ def pipeline_tasks(pipe: Pipeline, packet_bytes: Sequence[float],
     resources allow.
     """
     K = len(pipe.trees)
+    routes = getattr(pipe, "routes", None)
     tasks: List[SendTask] = []
     deliver: Dict[Tuple[int, int, int], int] = {}   # (node, g, k) -> task idx
     for g in range(num_groups):
@@ -515,7 +533,9 @@ def pipeline_tasks(pipe: Pipeline, packet_bytes: Sequence[float],
                                       src=u, dst=v,
                                       nbytes=packet_bytes[task.tree],
                                       deps=tuple(deps), blk=(blk, blk + 1),
-                                      group=g))
+                                      group=g,
+                                      route=routes.get(task.edge)
+                                      if routes else None))
                 deliver[(v, g, task.tree)] = idx
     # second pass: resolve deps recorded as -1 (sender's delivery scheduled in
     # a *later* round index than the forward — legal in cyclic schedules, the
@@ -557,14 +577,21 @@ def delta_star(topo: Topology, cm: ConflictModel, pipe: Pipeline,
     group's total service time: max over resources r of
     sum_{tasks using r} (L_e + P_tree/B_e) / capacity(r)."""
     ct = cm.compiled()
+    routes = getattr(pipe, "routes", None)
     load: Dict[Hashable, float] = {}
     caps: Dict[Hashable, int] = {}
     for rnd in pipe.rounds:
         for task in rnd:
             e = task.edge
-            lat, bw = ct.edge_cost(e)
+            rt = routes.get(e) if routes else None
+            if rt is not None:
+                lat, bw = rt[1], rt[2]
+                rs = cm.resources(e, links=rt[0])
+            else:
+                lat, bw = ct.edge_cost(e)
+                rs = ct.resources(e)
             dur = lat + packet_bytes[task.tree] / bw
-            for r in ct.resources(e):
+            for r in rs:
                 load[r] = load.get(r, 0.0) + dur
                 if r not in caps:
                     caps[r] = cm.capacity(r)

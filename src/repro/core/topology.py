@@ -124,12 +124,26 @@ class Topology:
                     stack.append(w)
         assert len(seen) == self.num_nodes, f"{self.name}: must be connected"
 
+    def automorphisms(self):
+        """The fabric's validated vertex-automorphism generators plus orbit
+        decomposition (``repro.core.symmetry.Automorphisms``). Constructors
+        record a generating set (validated against the edge/cost structure at
+        construction); fabrics without recorded symmetry return a trivial
+        (empty-generator) object, under which every vertex is its own orbit.
+        """
+        from repro.core.symmetry import Automorphisms
+        a = self.__dict__.get("_automorphisms")
+        if a is None:
+            a = self._automorphisms = Automorphisms(
+                self.num_nodes, getattr(self, "_aut_gens", ()))
+        return a
+
     def __getstate__(self):
         """Pickle without derived caches (adjacency maps, next-hop tables);
         they rebuild lazily on first use after load. Keeps plan artifacts
         small and immune to cache-layout drift."""
         state = dict(self.__dict__)
-        for k in ("_adj_maps", "_next_hop_table"):
+        for k in ("_adj_maps", "_next_hop_table", "_automorphisms"):
             state.pop(k, None)
         return state
 
@@ -230,6 +244,21 @@ class FlatTopology(Topology):
         return e in self._edge_set
 
 
+def _record_automorphisms(topo: Topology, gens, strict: bool = True) -> None:
+    from repro.core import symmetry
+    symmetry.record_generators(topo, gens, strict=strict)
+
+
+def _grid_perm(rows: int, cols: int, f) -> Tuple[int, ...]:
+    """Vertex permutation of an rows x cols grid from a cell map (r,c)->(r,c)."""
+    perm = [0] * (rows * cols)
+    for r in range(rows):
+        for c in range(cols):
+            nr, nc = f(r, c)
+            perm[r * cols + c] = nr * cols + nc
+    return tuple(perm)
+
+
 def mesh2d(rows: int, cols: int, preset: str = "ndr400") -> FlatTopology:
     """2D (non-wrapped) mesh; paper dims 8x16, 16x16, 16x32(8x32*), 32x32."""
     pairs = []
@@ -240,7 +269,14 @@ def mesh2d(rows: int, cols: int, preset: str = "ndr400") -> FlatTopology:
                 pairs.append((v, v + 1))
             if r + 1 < rows:
                 pairs.append((v, v + cols))
-    return FlatTopology(f"mesh2d_{rows}x{cols}", rows * cols, pairs, preset)
+    topo = FlatTopology(f"mesh2d_{rows}x{cols}", rows * cols, pairs, preset)
+    # non-wrapped grid: Aut = reflections (+ transpose when square), D4/D2
+    gens = [_grid_perm(rows, cols, lambda r, c: (rows - 1 - r, c)),
+            _grid_perm(rows, cols, lambda r, c: (r, cols - 1 - c))]
+    if rows == cols:
+        gens.append(_grid_perm(rows, cols, lambda r, c: (c, r)))
+    _record_automorphisms(topo, gens)
+    return topo
 
 
 def torus2d(rows: int, cols: int, preset: str = "tpu_ici") -> FlatTopology:
@@ -251,20 +287,36 @@ def torus2d(rows: int, cols: int, preset: str = "tpu_ici") -> FlatTopology:
             v = r * cols + c
             pairs.add(tuple(sorted((v, r * cols + (c + 1) % cols))))
             pairs.add(tuple(sorted((v, ((r + 1) % rows) * cols + c))))
-    return FlatTopology(f"torus2d_{rows}x{cols}", rows * cols, sorted(pairs),
+    topo = FlatTopology(f"torus2d_{rows}x{cols}", rows * cols, sorted(pairs),
                         preset, shared_cable=False)
+    # wrapping adds the translations: the torus is vertex-transitive
+    gens = [_grid_perm(rows, cols, lambda r, c: ((r + 1) % rows, c)),
+            _grid_perm(rows, cols, lambda r, c: (r, (c + 1) % cols)),
+            _grid_perm(rows, cols, lambda r, c: (rows - 1 - r, c)),
+            _grid_perm(rows, cols, lambda r, c: (r, cols - 1 - c))]
+    if rows == cols:
+        gens.append(_grid_perm(rows, cols, lambda r, c: (c, r)))
+    _record_automorphisms(topo, gens)
+    return topo
 
 
 def ring(n: int, preset: str = "tpu_ici") -> FlatTopology:
     pairs = sorted({tuple(sorted((i, (i + 1) % n))) for i in range(n)})
-    return FlatTopology(f"ring_{n}", n, pairs, preset, shared_cable=False)
+    topo = FlatTopology(f"ring_{n}", n, pairs, preset, shared_cable=False)
+    _record_automorphisms(topo, [tuple((i + 1) % n for i in range(n)),
+                                 tuple((n - i) % n for i in range(n))])
+    return topo
 
 
 def hypercube(dim: int, preset: str = "edr") -> FlatTopology:
     n = 1 << dim
     pairs = [(v, v ^ (1 << d)) for v in range(n) for d in range(dim)
              if (v ^ (1 << d)) > v]
-    return FlatTopology(f"hypercube_{dim}", n, pairs, preset)
+    topo = FlatTopology(f"hypercube_{dim}", n, pairs, preset)
+    # XOR translations generate a transitive subgroup of Aut(Q_d)
+    _record_automorphisms(
+        topo, [tuple(v ^ (1 << d) for v in range(n)) for d in range(dim)])
+    return topo
 
 
 def butterfly(n: int, preset: str = "edr") -> FlatTopology:
@@ -295,8 +347,15 @@ def butterfly(n: int, preset: str = "edr") -> FlatTopology:
             while s < rows:
                 cand.add(tuple(sorted((v, ((r + s) % rows) * cols + c))))
                 s *= 2
-    return FlatTopology(f"butterfly_{n}", n, sorted(pairs), preset,
+    topo = FlatTopology(f"butterfly_{n}", n, sorted(pairs), preset,
                         candidate_subset=sorted(cand))
+    # row/column rotations: all-to-all cables are closed under any row/col
+    # permutation, and the power-of-2 stride candidate pairs are cyclic in
+    # each dimension — the flattened butterfly is vertex-transitive
+    _record_automorphisms(
+        topo, [_grid_perm(rows, cols, lambda r, c: ((r + 1) % rows, c)),
+               _grid_perm(rows, cols, lambda r, c: (r, (c + 1) % cols))])
+    return topo
 
 
 # ---------------------------------------------------------------------------
@@ -366,7 +425,11 @@ class HierTopology(Topology):
             for st in strides:
                 r = routers[(my_r + st) % nr]
                 peers = self._router_nodes[r]
-                j = peers[(i + my_r) % len(peers)]
+                # local-index-preserving peer choice: node li of a router
+                # talks to node li of the remote router, so router-level
+                # symmetries (pod/group rotations) map candidates onto
+                # candidates — the precondition for orbit-shared plans
+                j = peers[li % len(peers)]
                 edges.add((i, j))
                 edges.add((j, i))
         return tuple(sorted(edges))
@@ -426,8 +489,20 @@ def fat_tree(n: int, radix: int = 16, preset: str = "edr") -> HierTopology:
         trunk_latency[t] = lat
         trunk_bandwidth[t] = bw * radix   # full bisection
 
-    return HierTopology(f"fattree_{n}", n, node_router, FatTreeRoute(),
+    topo = HierTopology(f"fattree_{n}", n, node_router, FatTreeRoute(),
                         trunk_latency, trunk_bandwidth, preset)
+    if n % radix == 0 and num_pods > 1:
+        # full pods: pod rotation/reflection + a synchronized local rotation
+        # make the fat-tree vertex-transitive (validated: trunk costs are
+        # uniform and the candidate rule is local-index-preserving)
+        def pod_map(f):
+            return tuple(f(i // radix, i % radix) for i in range(n))
+        _record_automorphisms(topo, [
+            pod_map(lambda p, l: ((p + 1) % num_pods) * radix + l),
+            pod_map(lambda p, l: (num_pods - 1 - p) * radix + l),
+            pod_map(lambda p, l: p * radix + (l + 1) % radix),
+        ])
+    return topo
 
 
 class DragonflyRoute:
@@ -477,8 +552,19 @@ def dragonfly(n: int, nodes_per_router: int = 4,
     trunk_bandwidth: Dict[str, float] = {}
     route = DragonflyRoute(aries_b * nodes_per_router,
                            trunk_latency, trunk_bandwidth)
-    return HierTopology(f"dragonfly_{n}", n, node_router, route,
+    topo = HierTopology(f"dragonfly_{n}", n, node_router, route,
                         trunk_latency, trunk_bandwidth, "aries")
+    gens = []
+    if n % per_group == 0 and n // per_group > 1:
+        # group rotation: only valid while the lexicographic router order
+        # (g0r0, g0r1, ...) agrees with the numeric group order, hence
+        # strict=False below — it is dropped by validation past 9 groups
+        gens.append(tuple((i + per_group) % n for i in range(n)))
+    # synchronized rotation of the node slots within every router
+    gens.append(tuple(i - i % nodes_per_router
+                      + (i + 1) % nodes_per_router for i in range(n)))
+    _record_automorphisms(topo, gens, strict=False)
+    return topo
 
 
 def by_name(name: str, n: int) -> Topology:

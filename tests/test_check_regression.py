@@ -76,6 +76,43 @@ def test_cli_overrides_replace_committed_floor():
     assert check(_data(pipeline=4.9), FLOORS, {"min_speedup": 4.5}) == 0
 
 
+def test_min_max_cell_specs():
+    """Floor values may be {"min": x} / {"max": x}; max turns the cell into
+    a wall-time ceiling (bigger = regression)."""
+    floors = {"full": {"pipeline": {"min": 5.0},
+                       "build_plan_seconds": {"max": 3.0}}}
+    data = _data()
+    data["records"].append({"name": "build_plan", "engine": "fast",
+                            "seconds": 0.3})
+    assert check(data, floors, {}) == 0
+    data["records"][-1]["seconds"] = 3.5          # above the ceiling
+    assert check(data, floors, {}) == 1
+    data["records"][-1]["seconds"] = 0.3
+    data["records"][0]["speedup"] = 4.9           # below the {"min": ...}
+    assert check(data, floors, {}) == 1
+
+
+def test_plan_cache_cells_extracted_and_gated(capsys):
+    floors = {"full": {"plan_cache_torus2d": {"min": 10.0},
+                       "plan_cache_mesh2d": 3.0,
+                       "plan_cache_hit_rate": {"min": 0.9}}}
+    records = [
+        {"name": "plan_cache", "engine": "fast", "topo": "torus2d",
+         "speedup": 18.2},
+        {"name": "plan_cache", "engine": "fast", "topo": "mesh2d",
+         "speedup": 6.0},
+        {"name": "plan_cache_hit_rate", "engine": "fast", "topo": "torus2d",
+         "speedup": 1.0, "hit_rate": 0.99},
+    ]
+    cells = extract_cells(records)
+    assert cells == {"plan_cache_torus2d": 18.2, "plan_cache_mesh2d": 6.0,
+                     "plan_cache_hit_rate": 0.99}
+    assert check({"smoke": False, "records": records}, floors, {}) == 0
+    records[2]["hit_rate"] = 0.5                  # cold cache = regression
+    assert check({"smoke": False, "records": records}, floors, {}) == 1
+    assert "FAIL plan_cache_hit_rate" in capsys.readouterr().out
+
+
 def test_main_end_to_end(tmp_path):
     """The exact CI invocation: results + floors from disk, exit code out."""
     results = tmp_path / "BENCH_simbench.json"
@@ -97,4 +134,12 @@ def test_committed_floors_file_is_sound():
     for profile in ("full", "smoke"):
         assert floors[profile]["baseline"] >= 2.0   # the acceptance floor
         assert set(floors[profile]) >= {"pipeline", "raw_pipeline",
-                                        "baseline"}
+                                        "baseline", "plan_cache_mesh2d",
+                                        "plan_cache_torus2d",
+                                        "plan_cache_hit_rate",
+                                        "build_plan_seconds"}
+        assert floors[profile]["plan_cache_hit_rate"]["min"] >= 0.9
+        assert "max" in floors[profile]["build_plan_seconds"]
+    # the acceptance criterion: >=10x orbit-shared pack assembly on the
+    # vertex-transitive 256-node fabric in the full profile
+    assert floors["full"]["plan_cache_torus2d"]["min"] >= 10.0

@@ -27,6 +27,8 @@ def _topo(name):
         return T.dragonfly(32)
     if name == "fattree":
         return T.fat_tree(32, radix=8)
+    if name == "butterfly":
+        return T.butterfly(32)
     raise ValueError(name)
 
 
@@ -37,12 +39,14 @@ def _delta(res):
 
 @pytest.fixture(scope="module")
 def topos():
-    return {name: _topo(name) for name in ("mesh2d", "dragonfly", "fattree")}
+    return {name: _topo(name)
+            for name in ("mesh2d", "dragonfly", "fattree", "butterfly")}
 
 
 @pytest.mark.parametrize("groups", [1, 4, 16])
 @pytest.mark.parametrize("mode", [FULL_DUPLEX, ALL_PORT])
-@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree"])
+@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree",
+                                  "butterfly"])
 def test_run_identical_on_grid(name, mode, groups, topos):
     """Same task list, both engines, full simulation: identical results."""
     topo = topos[name]
@@ -68,7 +72,8 @@ def test_run_identical_on_grid(name, mode, groups, topos):
 
 
 @pytest.mark.parametrize("mode", [FULL_DUPLEX, ALL_PORT])
-@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree"])
+@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree",
+                                  "butterfly"])
 def test_multitree_pipeline_identical(name, mode, topos):
     """Branchier K=2 schedules (double chain) also replay identically."""
     topo = topos[name]
@@ -195,7 +200,8 @@ def test_baseline_engines_identical(name):
 
 
 @pytest.mark.parametrize("mode", [FULL_DUPLEX, ALL_PORT])
-@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree"])
+@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree",
+                                  "butterfly"])
 @pytest.mark.parametrize("algo", ["srda", "glf", "bine", "pipeline"])
 def test_baseline_lowered_matrix(algo, name, mode, topos):
     """The lowered task-list path (memoized ``CompiledTaskList``, folded

@@ -1,0 +1,137 @@
+"""PlanServer: warm cache, orbit-canonicalizing lookups, single-flight
+builds, LRU bounds and the serving counters the bench/CI smoke gate on."""
+
+import threading
+
+import pytest
+
+from repro.core import topology as T
+from repro.core.bbs import broadcast_time, build_plan
+from repro.launch.planserver import PlanServer, run_smoke
+
+
+@pytest.fixture(scope="module")
+def ring16_plan():
+    return build_plan(T.ring(16), root=0)
+
+
+def test_request_answers_match_direct_build(ring16_plan):
+    server = PlanServer()
+    topo = T.ring(16)
+    fp = server.register(topo)
+    for root in (0, 7):
+        for M in (1e6, 16e6):
+            t, info = server.request(fp, root, M)
+            # vertex-transitive: every root answers like the root-0 build
+            t_ref, _ = broadcast_time(ring16_plan, M)
+            assert t == t_ref, (root, M)
+            assert "strategy" in info
+
+
+def test_orbit_canonicalization_builds_once():
+    server = PlanServer()
+    topo = T.ring(16)
+    fp = server.register(topo)
+    n = topo.num_nodes
+    for i in range(50):
+        server.request(fp, i % n, 1e6)
+    st = server.stats
+    assert st.builds == 1                  # one orbit, one build
+    assert st.relabels == n - 1
+    assert st.requests == 50
+    assert st.hit_rate == 1.0 - 1.0 / 50
+    # repeat queries land in L1
+    assert st.l1_hits == 50 - n
+
+
+def test_unregistered_fingerprint_rejected():
+    server = PlanServer()
+    with pytest.raises(KeyError, match="register"):
+        server.request("deadbeef", 0, 1e6)
+
+
+def test_single_flight_dedups_concurrent_builds():
+    """N threads racing for roots of one orbit: exactly one build happens,
+    everyone gets a working plan."""
+    server = PlanServer()
+    topo = T.ring(8)
+    fp = server.register(topo)
+    results, errors = [], []
+    barrier = threading.Barrier(6)
+
+    def worker(root):
+        try:
+            barrier.wait(timeout=30)
+            results.append(server.plan(fp, root))
+        except Exception as exc:   # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors
+    assert len(results) == 6
+    assert server.stats.builds == 1
+    for root, plan in zip(range(6), sorted(results, key=lambda p: p.root)):
+        assert plan.root == root
+
+
+def test_prefetch_coalesces_and_serves():
+    server = PlanServer()
+    topo = T.ring(8)
+    futs = [server.prefetch(topo, r) for r in (0, 3, 5)]
+    plans = [f.result(timeout=120) for f in futs]
+    assert [p.root for p in plans] == [0, 3, 5]
+    assert server.stats.builds == 1
+    # the subsequent request path is fully warm
+    t, _ = server.request(topo, 3, 1e6)
+    assert t > 0 and server.stats.builds == 1
+
+
+def test_plan_lru_evicts_and_counts():
+    server = PlanServer(plan_capacity=2)
+    topo = T.mesh2d(4, 4)   # 3 orbits: reps 0, 1, 5
+    fp = server.register(topo)
+    for root in (0, 1, 5):
+        server.plan(fp, root)
+    assert server.stats.builds == 3
+    assert server.stats.evictions >= 1     # capacity 2 < 3 plans
+    # the evicted representative rebuilds on demand (still correct)
+    server.plan(fp, 0)
+    assert server.stats.builds >= 3
+
+
+def test_response_lru_bounds_l1():
+    server = PlanServer(response_capacity=2)
+    topo = T.ring(8)
+    fp = server.register(topo)
+    sizes = (1e5, 2e5, 4e5)
+    for M in sizes:
+        server.request(fp, 0, M)
+    before = server.stats.l1_hits
+    server.request(fp, 0, sizes[0])        # evicted: recompute, no L1 hit
+    assert server.stats.l1_hits == before
+    server.request(fp, 0, sizes[2])        # still resident
+    assert server.stats.l1_hits == before + 1
+
+
+def test_store_backed_server_reuses_packed_artifacts(tmp_path):
+    from repro.core.planstore import PlanStore
+
+    store = PlanStore(str(tmp_path))
+    server = PlanServer(store=store)
+    topo = T.ring(8)
+    t1, _ = server.request(topo, 5, 1e6)
+    assert server.stats.builds == 1
+    # a fresh server over the same directory: the canonical plan comes off
+    # disk, so its (process-level) build does not run the planner again
+    server2 = PlanServer(store=PlanStore(str(tmp_path)))
+    t2, _ = server2.request(topo, 5, 1e6)
+    assert t1 == t2
+
+
+def test_smoke_entrypoint():
+    st = run_smoke(n=8, requests=40, verbose=False)
+    assert st.builds == 1 and st.hit_rate >= 0.9

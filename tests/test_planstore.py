@@ -264,6 +264,85 @@ def test_packed_schema_and_fingerprint_validation(tmp_path, mesh):
         store4.load_packed(other)
 
 
+def test_packed_orbit_sharing_builds_only_representatives(tmp_path, mesh):
+    """The tentpole contract: an all-roots pack costs one build per vertex
+    orbit; every other root is served by witness relabeling, the artifact
+    stores canonical plans + witnesses only, and a fresh process serves
+    every root from disk without building."""
+    from repro.core.bbs import build_plan
+
+    calls = []
+
+    def builder(topo, root=0, mode=FULL_DUPLEX, cm=None):
+        calls.append(root)
+        return build_plan(topo, root=root, mode=mode, cm=cm)
+
+    store = PlanStore(str(tmp_path))
+    n = mesh.num_nodes
+    orbits = mesh.automorphisms().orbits()
+    plans, _, _ = store.get_or_build_packed(mesh, roots=range(n),
+                                            builder=builder)
+    assert sorted(calls) == sorted(orbits.reps)
+    assert len(calls) == orbits.num_orbits < n
+    for r, plan in plans.items():
+        assert plan.root == r
+    # the artifact persists only the canonical plans plus witnesses
+    from repro.core.planstore import PackedPlanKey
+    key = PackedPlanKey.for_topology(mesh)
+    blob = pickle.load(open(store.path_for_packed(key), "rb"))
+    assert sorted(blob["plans"]) == sorted(orbits.reps)
+    assert set(blob["witnesses"]) == set(range(n)) - set(orbits.reps)
+    for r, (canon, perm) in blob["witnesses"].items():
+        assert orbits.rep_of[r] == canon and perm[canon] == r
+    # fresh process: all roots served warm, zero builds
+    calls2 = []
+
+    def builder2(topo, root=0, mode=FULL_DUPLEX, cm=None):
+        calls2.append(root)
+        return build_plan(topo, root=root, mode=mode, cm=cm)
+
+    plans2, _, cached = PlanStore(str(tmp_path)).get_or_build_packed(
+        mesh, roots=range(n), builder=builder2)
+    assert calls2 == [] and cached == n
+    # relabeled plans answer exactly like the first assembly's
+    for r in (1, n // 2, n - 1):
+        t0, _ = broadcast_time(plans[r], 4e6)
+        t1, _ = broadcast_time(plans2[r], 4e6)
+        assert t0 == t1
+
+
+def test_prune_removes_stale_artifacts(tmp_path, mesh, mesh_plan):
+    """prune(): tmp leftovers, unreadable pickles, wrong-schema artifacts
+    and renamed/drifted files go; valid current-schema artifacts stay."""
+    store = PlanStore(str(tmp_path))
+    key = PlanKey.for_topology(mesh, root=0)
+    good = store.store(key, mesh_plan)
+
+    tmp_leftover = os.path.join(str(tmp_path), "interrupted.pkl.tmp")
+    open(tmp_leftover, "wb").write(b"half a write")
+    garbage = os.path.join(str(tmp_path), "garbage.pkl")
+    open(garbage, "wb").write(b"\x00not a pickle")
+    renamed = os.path.join(str(tmp_path), "renamed-copy.pkl")
+    with open(good, "rb") as f:
+        open(renamed, "wb").write(f.read())
+    old_schema = os.path.join(str(tmp_path), "old-schema.pkl")
+    blob = pickle.load(open(good, "rb"))
+    blob["header"]["schema"] = SCHEMA_VERSION - 1
+    pickle.dump(blob, open(old_schema, "wb"))
+    unrelated = os.path.join(str(tmp_path), "README.txt")
+    open(unrelated, "w").write("not an artifact; must be left alone")
+
+    removed = store.prune()
+    assert sorted(os.path.basename(p) for p in removed) == \
+        ["garbage.pkl", "interrupted.pkl.tmp", "old-schema.pkl",
+         "renamed-copy.pkl"]
+    assert os.path.exists(good)
+    assert os.path.exists(unrelated)
+    loaded, _ = store.load(key)              # the survivor still validates
+    assert loaded.root == 0
+    assert store.prune() == []               # idempotent
+
+
 def test_packed_key_separates_modes(mesh):
     from repro.core.planstore import PackedPlanKey
     k1 = PackedPlanKey.for_topology(mesh, mode=FULL_DUPLEX)

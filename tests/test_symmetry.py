@@ -1,0 +1,241 @@
+"""Vertex automorphisms, orbit decomposition and plan relabeling.
+
+The tentpole contract: every generator a fabric constructor records is a
+validated automorphism (edge-set closure, cost preservation, candidate-set
+closure), orbits pick one canonical root per equivalence class, and
+``relabel_plan`` applied to an orbit representative's plan is *bit-identical*
+— T(m), Δ and the (relabeled) per-node finish vector — to replaying the
+representative under both engines. That identity is what lets the PlanStore
+pack one canonical plan per orbit and the PlanServer serve every symmetric
+root from one build.
+"""
+
+import random
+
+import pytest
+
+from repro.core import symmetry as S
+from repro.core import topology as T
+from repro.core.bbs import broadcast_time, build_plan
+from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
+from repro.core.simulator import simulate_pipeline
+
+
+FABRICS = {
+    "mesh2d_4x8": lambda: T.mesh2d(4, 8),
+    "mesh2d_4x4": lambda: T.mesh2d(4, 4),
+    "torus2d_4x4": lambda: T.torus2d(4, 4),
+    "ring_16": lambda: T.ring(16),
+    "hypercube_16": lambda: T.hypercube(4),
+    "butterfly_32": lambda: T.butterfly(32),
+    "fattree_32": lambda: T.fat_tree(32, radix=8),
+    "dragonfly_64": lambda: T.dragonfly(64),
+}
+
+ORBIT_COUNTS = {
+    # non-wrapped mesh2d is NOT vertex-transitive: D4 (square) / reflections
+    # (rectangular) leave one orbit per distinct (row, col) distance class
+    "mesh2d_4x8": 8,
+    "mesh2d_4x4": 3,
+    # wrapped/recursive fabrics are vertex-transitive: one orbit
+    "torus2d_4x4": 1,
+    "ring_16": 1,
+    "hypercube_16": 1,
+    "butterfly_32": 1,
+    "fattree_32": 1,
+    # dragonfly: group rotation only — one orbit per router-local slot class
+    "dragonfly_64": 8,
+}
+
+
+# ---------------------------------------------------------------------------
+# group-theory primitives
+# ---------------------------------------------------------------------------
+
+def test_compose_invert_identity():
+    p = (2, 0, 1, 3)
+    q = (1, 2, 3, 0)
+    n = len(p)
+    assert S.compose(p, S.invert(p)) == S.identity(n)
+    assert S.compose(S.invert(p), p) == S.identity(n)
+    pq = S.compose(p, q)
+    for v in range(n):
+        assert pq[v] == p[q[v]]
+    assert not S.is_permutation((0, 0, 1), 3)
+    assert not S.is_permutation((0, 1), 3)
+
+
+# ---------------------------------------------------------------------------
+# every recorded generator is an automorphism (the ISSUE property test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(FABRICS))
+def test_recorded_generators_preserve_edges(name):
+    """Property: every recorded automorphism maps the edge set onto itself,
+    preserving latency/bandwidth, and maps the candidate edge set onto
+    itself — re-validated here independently of construction-time checks,
+    over the generators *and* random words of the generated group."""
+    topo = FABRICS[name]()
+    gens = getattr(topo, "_aut_gens", ())
+    assert gens, f"{name}: no automorphism generators recorded"
+    cands = {(u, v) for u, v in topo.candidate_edges}
+    # flat fabrics expose the physical cable set; hierarchical ones route
+    # through routers/trunks, where validate_generator checks invariance
+    cables = getattr(topo, "_edge_set", None)
+    rng = random.Random(name)
+    words = list(gens)
+    for _ in range(8):   # random group elements beyond the generating set
+        w = S.identity(topo.num_nodes)
+        for _ in range(rng.randint(2, 4)):
+            w = S.compose(rng.choice(gens), w)
+        words.append(w)
+    for g in words:
+        assert S.is_permutation(g, topo.num_nodes)
+        if cables is not None:
+            mapped = {(g[u], g[v]) for u, v in cables}
+            assert mapped == set(cables), f"{name}: cable set not closed"
+        mapped_c = {(g[u], g[v]) for u, v in cands}
+        assert mapped_c == cands, f"{name}: candidate set not closed"
+        for u, v in cands:
+            assert topo.latency((u, v)) == topo.latency((g[u], g[v]))
+            assert topo.bandwidth((u, v)) == topo.bandwidth((g[u], g[v]))
+
+
+def test_validate_generator_rejects_non_automorphism():
+    topo = T.mesh2d(4, 4)
+    n = topo.num_nodes
+    swap = list(range(n))
+    swap[0], swap[5] = swap[5], swap[0]   # corner <-> interior: not closed
+    with pytest.raises(ValueError):
+        S.validate_generator(topo, tuple(swap))
+    with pytest.raises(ValueError):
+        S.validate_generator(topo, tuple(range(n - 1)))
+
+
+def test_record_generators_strict_and_lenient():
+    topo = T.ring(8)
+    n = topo.num_nodes
+    good = tuple((i + 1) % n for i in range(n))
+    bad = tuple(range(n))[:-2] + (n - 1, n - 2)   # breaks the ring closure
+    with pytest.raises(ValueError):
+        S.record_generators(topo, [good, bad], strict=True)
+    S.record_generators(topo, [good, bad], strict=False)
+    assert topo._aut_gens == (good,)
+
+
+# ---------------------------------------------------------------------------
+# orbits and witnesses
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(FABRICS))
+def test_orbit_decomposition(name):
+    topo = FABRICS[name]()
+    aut = topo.automorphisms()
+    orbits = aut.orbits()
+    assert orbits.num_orbits == ORBIT_COUNTS[name]
+    n = topo.num_nodes
+    seen = set()
+    for v in range(n):
+        rep = orbits.rep_of[v]
+        assert rep == min(orbits.members[rep])
+        seen.add(rep)
+        w = orbits.witness(v)
+        assert S.is_permutation(w, n)
+        assert w[rep] == v, f"{name}: witness does not map rep to {v}"
+    assert seen == set(orbits.reps)
+    assert aut.canonical_root(0) == 0
+
+
+def test_automorphisms_cached_and_pickle_safe():
+    import pickle
+
+    topo = T.ring(16)
+    assert topo.automorphisms() is topo.automorphisms()
+    clone = pickle.loads(pickle.dumps(topo))   # cache must not persist
+    assert clone.automorphisms().orbits().num_orbits == 1
+
+
+# ---------------------------------------------------------------------------
+# relabel_plan bit-identity (the property the pack/server rest on)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,mode", [
+    ("mesh2d_4x8", FULL_DUPLEX),
+    ("mesh2d_4x8", ALL_PORT),
+    ("ring_16", FULL_DUPLEX),
+    ("fattree_32", FULL_DUPLEX),
+])
+def test_relabel_plan_bit_identical(name, mode):
+    """Build at an orbit representative, relabel to a random orbit member:
+    every candidate must replay with identical T(m) and Δ and a finish
+    vector that is exactly the g-image of the representative's — under
+    both engines."""
+    topo = FABRICS[name]()
+    aut = topo.automorphisms()
+    orbits = aut.orbits()
+    rng = random.Random(name + mode)
+    rep = orbits.reps[0]
+    members = sorted(orbits.members[rep])
+    target = members[-1] if len(members) > 1 else rep
+    if len(members) > 2:
+        target = rng.choice(members[1:])
+    w = orbits.witness(target)
+
+    cm = ConflictModel(topo, mode)
+    plan = build_plan(topo, root=rep, mode=mode, cm=cm)
+    relabeled = S.relabel_plan(plan, w)
+    assert relabeled.root == target
+    for cand, rcand in zip(plan.candidates, relabeled.candidates):
+        assert cand.name == rcand.name
+        assert cand.a_hat == rcand.a_hat and cand.b_hat == rcand.b_hat
+        for engine in ("fast", "reference"):
+            for m in (1, 4):
+                t1, r1, d1 = simulate_pipeline(
+                    topo, plan.cm, cand.pipeline, 4e5 * m, m, rep,
+                    max_sim_groups=m, engine=engine)
+                t2, r2, d2 = simulate_pipeline(
+                    topo, relabeled.cm, rcand.pipeline, 4e5 * m, m, target,
+                    max_sim_groups=m, engine=engine)
+                assert t1 == t2 and d1 == d2, (cand.name, engine, m)
+                assert {w[v]: t for v, t in r1.node_finish.items()} \
+                    == r2.node_finish, (cand.name, engine, m)
+
+
+@pytest.mark.parametrize("name", ["mesh2d_4x8", "ring_16", "fattree_32"])
+def test_relabel_matches_fresh_build_times(name):
+    """Plan-level serving contract: the relabeled plan answers *exactly*
+    like its orbit representative across the message-size sweep (that is
+    what the pack/server substitute it for), and agrees with a fresh build
+    at the target root on the selected strategy. Exact equality against
+    the fresh build is asserted only on the flat fabrics — the candidate
+    *construction* heuristics (two_tree levelings etc.) tie-break on node
+    ids and are not equivariant on hierarchical fabrics, so a fresh
+    fat-tree build at another root is a different-but-equally-valid plan,
+    not a bit-identical one (each root's heuristic tree wins in a
+    different message regime; see CHANGES.md PR 7)."""
+    topo = FABRICS[name]()
+    orbits = topo.automorphisms().orbits()
+    rep = orbits.reps[0]
+    members = sorted(orbits.members[rep])
+    target = members[len(members) // 2] if len(members) > 1 else rep
+    plan = build_plan(topo, root=rep)
+    relabeled = plan.relabel(orbits.witness(target))
+    fresh = build_plan(topo, root=target)
+    for M in (64e3, 1e6, 16e6):
+        tr, ir = broadcast_time(relabeled, M)
+        t0, i0 = broadcast_time(plan, M)
+        tf, if_ = broadcast_time(fresh, M)
+        assert tr == t0 and ir["strategy"] == i0["strategy"], (name, M)
+        assert ir["strategy"] == if_["strategy"], (name, M)
+        if name != "fattree_32":
+            assert tr == tf, (name, M)
+
+
+def test_relabel_identity_is_noop_answerwise():
+    topo = T.ring(16)
+    plan = build_plan(topo, root=0)
+    same = plan.relabel(S.identity(topo.num_nodes))
+    for M in (1e6, 16e6):
+        t0, _ = broadcast_time(plan, M)
+        t1, _ = broadcast_time(same, M)
+        assert t0 == t1
