@@ -18,6 +18,10 @@ Cells:
   plan_cache_<topo>  symmetry-orbit pack assembly speedup vs per-root builds
   plan_cache_hit_rate  warm hit rate of the PlanServer request stream
   build_plan_seconds   wall time of one plan build — gated as a *ceiling*
+  workload_jobs_per_s  sustained multi-root workload throughput at the
+                       heaviest offered-load point (simulated time, so the
+                       cell is deterministic — any drop is a semantic
+                       change in the scheduler loop, not runner noise)
 
 A floor value is either a bare number (a minimum, the historical form) or
 ``{"min": x}`` / ``{"max": x}`` — ``max`` turns the cell into a ceiling,
@@ -72,6 +76,8 @@ def extract_cells(records) -> dict:
             cells["plan_cache_hit_rate"] = rec["hit_rate"]
         elif name == "build_plan":
             cells["build_plan_seconds"] = rec["seconds"]
+        elif name == "workload":
+            cells["workload_jobs_per_s"] = rec["jobs_per_s"]
     return cells
 
 

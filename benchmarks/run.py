@@ -67,17 +67,16 @@ def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
     per fabric holding every sampled root — the per-root-file blowup of the
     mean-over-roots tables is gone), so only the first sweep pays the plan
     builds."""
+    from repro import api
     from repro.core import topology as T
-    from repro.core.baselines import simulate_baseline
     from repro.core.bbs import broadcast_time
-    from repro.core.intersection import ConflictModel, FULL_DUPLEX
 
     rows = []
     for topo_name in ("mesh2d", "butterfly", "dragonfly", "fattree"):
         for n in sizes:
             t_cell = time.time()
             topo = T.by_name(topo_name, n)
-            cm = ConflictModel(topo, FULL_DUPLEX)
+            model = api.compile(topo)
             cell_roots = sorted({r % n for r in roots})
             packed, _, _ = plan_store().get_or_build_packed(topo, cell_roots)
             for r, plan in packed.items():
@@ -96,8 +95,8 @@ def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
                             # lowered task lists round-trip through the
                             # plan store too: repeats of a (topo, root,
                             # algo, M) cell skip generation and lowering
-                            t = simulate_baseline(
-                                topo, cm, algo, root, M,
+                            t = model.simulate_baseline(
+                                algo, root, M,
                                 store=plan_store()).finish_time
                         ts.append(t)
                     mean = sum(ts) / len(ts)
@@ -122,22 +121,22 @@ def bench_broadcast_tables(sizes, messages, roots=(0, 17)):
 
 def bench_time_profile(n=128):
     """Thm 2: T(m) affine in m; prints fitted a, b and max residual."""
+    from repro import api
     from repro.core import topology as T
     from repro.core import arborescence as arb
-    from repro.core.intersection import ConflictModel, FULL_DUPLEX
     from repro.core.schedule import build_pipeline
-    from repro.core.simulator import simulate_pipeline
+    from repro.core.simconfig import SimConfig
     from repro.core.timeprofile import fit_time_profile
 
-    topo = T.by_name("mesh2d", n)
-    cm = ConflictModel(topo, FULL_DUPLEX)
-    pipe = build_pipeline(topo, [arb.chain_arborescence(topo, 0)], cm)
+    model = api.compile(T.by_name("mesh2d", n))
+    pipe = build_pipeline(model.topo, [arb.chain_arborescence(model.topo, 0)],
+                          model.cm)
     group = 1e6
     ms = [2, 4, 8, 16, 32]
     times = []
     for m in ms:
-        t, _, _ = simulate_pipeline(topo, cm, pipe, group * m, m, 0,
-                                    max_sim_groups=m)
+        t, _, _ = model.simulate_pipeline(pipe, group * m, m, 0,
+                                          config=SimConfig(max_sim_groups=m))
         times.append(t)
     prof = fit_time_profile(ms, times, tau=1.0)
     resid = max(abs(prof.a + prof.b * m - t) / t
@@ -150,28 +149,27 @@ def bench_time_profile(n=128):
 def bench_rate_timeline(n=128, M=16e6):
     """Fig 2: system-wide receive rate over time; derived: peak and mean
     rate as a fraction of the LP bound C*(n-1)."""
+    from repro import api
     from repro.core import topology as T
-    from repro.core.baselines import simulate_baseline
-    from repro.core.bbs import broadcast_time
-    from repro.core.intersection import ConflictModel, FULL_DUPLEX
-    from repro.core.simulator import simulate_pipeline
+    from repro.core.simconfig import SimConfig
 
     out = {}
     for topo_name in ("mesh2d", "dragonfly"):
         topo = T.by_name(topo_name, n)
-        cm = ConflictModel(topo, FULL_DUPLEX)
+        model = api.compile(topo)
         plan, _ = _plan_cached(topo_name, n, 0)
         cand, m = plan.select(M)[0]
         m0 = min(m, 24)
-        tot, res, _ = simulate_pipeline(topo, cm, cand.pipeline, M * m0 / m,
-                                        m0, 0, max_sim_groups=m0)
+        tot, res, _ = model.simulate_pipeline(
+            cand.pipeline, M * m0 / m, m0, 0,
+            config=SimConfig(max_sim_groups=m0))
         tl = res.rate_timeline(bins=50)
         peak = max(r for _, r in tl)
         mean = sum(r for _, r in tl) / len(tl)
         bound = plan.lp.C * (topo.num_nodes - 1)
         print(f"rate/{topo_name}{n}/bbs,{tot*1e6:.1f},"
               f"peak_frac={peak/bound:.3f};mean_frac={mean/bound:.3f}")
-        srda = simulate_baseline(topo, cm, "srda", 0, M)
+        srda = model.simulate_baseline("srda", 0, M)
         tl2 = srda.rate_timeline(bins=50)
         peak2 = max(r for _, r in tl2)
         print(f"rate/{topo_name}{n}/srda,{srda.finish_time*1e6:.1f},"

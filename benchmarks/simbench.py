@@ -43,6 +43,11 @@ so the perf trajectory is tracked across PRs (uploaded as a CI artifact by
                  build). Also serves a root-symmetric request stream
                  through ``repro.launch.planserver.PlanServer`` and
                  records the warm-cache hit rate (gated >= 0.9)
+  workload       concurrent multi-root broadcast workloads
+                 (``repro.workload``): fixed-seed offered-load sweep over
+                 one corner orbit of the mesh; the sustained jobs/s at the
+                 heaviest (saturated) point is the gated capacity cell —
+                 simulated time, so it is deterministic per profile
 
 Usage:
   PYTHONPATH=src python -m benchmarks.simbench            # full (n=256)
@@ -464,23 +469,26 @@ def bench_churn(topo_name: str, n: int, message_bytes: float) -> None:
     baseline. Engine parity on the repaired run is asserted before
     recording. Reported, not gated: there is no committed floor for this
     cell (overhead is a model property, not a perf number)."""
+    from repro import api
     from repro.core import topology as T
-    from repro.core.baselines import BASELINES, simulate_baseline
+    from repro.core.baselines import BASELINES
     from repro.core.faults import FaultSchedule, verify_delivery
-    from repro.core.intersection import FULL_DUPLEX, ConflictModel
+    from repro.core.simconfig import SimConfig
 
     topo = T.by_name(topo_name, n)
-    cm = ConflictModel(topo, FULL_DUPLEX)
+    model = api.compile(topo)
     algo = "srda"
-    clean = simulate_baseline(topo, cm, algo, 0, message_bytes)
+    clean = model.simulate_baseline(algo, 0, message_bytes)
     edges = sorted({(t.src, t.dst)
                     for t in BASELINES[algo](topo, 0, message_bytes)})
     u, v = edges[len(edges) // 2]
     sched = FaultSchedule.kill_edge(topo, u, v, 0.45 * clean.finish_time)
-    faulty = simulate_baseline(topo, cm, algo, 0, message_bytes,
-                               engine="fast", faults=sched)
-    ref = simulate_baseline(topo, cm, algo, 0, message_bytes,
-                            engine="reference", faults=sched)
+    faulty = model.simulate_baseline(
+        algo, 0, message_bytes,
+        config=SimConfig(engine="fast", faults=sched))
+    ref = model.simulate_baseline(
+        algo, 0, message_bytes,
+        config=SimConfig(engine="reference", faults=sched))
     assert faulty.finish_time == ref.finish_time \
         and faulty.faults == ref.faults, \
         "churn: engines diverged on the repaired run"
@@ -636,6 +644,69 @@ def bench_plan_cache(n: int, requests: int = 100) -> None:
             relabel_seconds=round(st.relabel_seconds, 4))
 
 
+def bench_workload(n: int) -> None:
+    """Concurrent multi-root broadcast workloads (``repro.workload``): a
+    deterministic fixed-seed offered-load sweep on the mesh2d fabric,
+    roots restricted to one corner orbit (one canonical plan build serves
+    all four roots through the PlanServer). The gated cell is the
+    *sustained* jobs/s at the heaviest offered point — deep past the
+    saturation knee, so it measures fabric capacity in simulated time
+    (deterministic, machine-independent); wall-clock engine throughput is
+    recorded as context, never gated."""
+    import math
+
+    from repro import api
+    from repro.core import topology as T
+    from repro.workload import offered_load_sweep, poisson_jobs, \
+        run_workload, saturation_point
+
+    topo = T.by_name("mesh2d", n)
+    cols = int(math.isqrt(n))
+    roots = [0, cols - 1, n - cols, n - 1]        # the corner orbit
+    model = api.compile(topo, server=True)
+    nbytes = 1e6
+    t1, _ = model.broadcast_time(0, nbytes)
+    base = 1.0 / t1                               # 1 job per isolated T(M)
+
+    mults = (0.25, 1.0, 4.0, 16.0)
+    num_jobs = 32
+    reps = offered_load_sweep(model, [m * base for m in mults],
+                              num_jobs=num_jobs, roots=roots,
+                              nbytes=nbytes, seed=20260809)
+    tag = f"mesh2d_{n}"
+    for mult, rep in zip(mults, reps):
+        print(f"workload_{tag}_x{mult:g},{rep.jobs_per_s:.0f},"
+              f"jobs/s sustained (offered {rep.offered_rate:.0f}, "
+              f"p99 {rep.latency_p99 * 1e6:.0f}us, "
+              f"q99 {rep.queue_p99 * 1e6:.0f}us, sat={rep.saturated})")
+    sat = saturation_point(reps)
+    heavy = reps[-1]
+    assert heavy.saturated, \
+        "workload cell: heaviest offered point failed to saturate"
+    assert model.server.stats.builds == 1, \
+        "workload cell: corner orbit took more than one plan build"
+
+    # wall-clock engine throughput (context only; simulated-time cells gate)
+    jobs = poisson_jobs(mults[-1] * base, num_jobs, roots, nbytes,
+                        seed=20260809)
+    t0 = time.perf_counter()
+    rep2 = run_workload(model, jobs)
+    wall = time.perf_counter() - t0
+    assert rep2.to_dict() == heavy.to_dict(), \
+        "workload cell: rerun diverged — workload is not deterministic"
+    print(f"workload_saturation_{tag},{heavy.jobs_per_s:.0f},"
+          f"jobs/s capacity (knee at {sat if sat else 0:.0f} offered; "
+          f"{rep2.completed / wall:.0f} tasks/s wall)")
+    _record("workload", "fast", "mesh2d", n, 0,
+            rep2.completed / wall, 1.0,
+            jobs_per_s=round(heavy.jobs_per_s, 1),
+            offered_rate=round(heavy.offered_rate, 1),
+            latency_p99=heavy.latency_p99,
+            queue_p99=heavy.queue_p99,
+            saturation_offered=round(sat, 1) if sat else None,
+            num_jobs=num_jobs, nbytes=nbytes)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -658,6 +729,7 @@ def main(argv=None) -> int:
     bench_cycle(args.repeats)
     bench_build_plan(args.topo, 64 if args.smoke else 128)
     bench_plan_cache(64 if args.smoke else 256)
+    bench_workload(64 if args.smoke else 256)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "simbench",

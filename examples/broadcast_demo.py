@@ -23,23 +23,21 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import api
 from repro.core import topology as T
-from repro.core.baselines import simulate_baseline
-from repro.core.bbs import broadcast_time, build_plan
-from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
+from repro.core.bbs import build_plan
+from repro.core.intersection import ALL_PORT
 from repro.collectives import bbs_broadcast, make_device_schedule
 
 
 def main():
     print("=== BBS vs baselines (simulated, 128 nodes, 16 MB) ===")
     for name in ("mesh2d", "butterfly", "dragonfly", "fattree"):
-        topo = T.by_name(name, 128)
-        cm = ConflictModel(topo, FULL_DUPLEX)
-        plan = build_plan(topo, root=0)
-        t_bbs, info = broadcast_time(plan, 16e6)
+        model = api.compile(T.by_name(name, 128))
+        t_bbs, info = model.broadcast_time(0, 16e6)
         line = f"{name:10s} BBS={t_bbs*1e3:8.2f}ms ({info['strategy']})"
         for b in ("binomial", "pipeline", "srda"):
-            tb = simulate_baseline(topo, cm, b, 0, 16e6).finish_time
+            tb = model.simulate_baseline(b, 0, 16e6).finish_time
             line += f"  {b}={tb*1e3:7.2f}ms"
         print(line)
 

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core import arborescence as arb
 from repro.core.intersection import ConflictModel
 from repro.core.routing import CompiledTaskList
+from repro.core.simconfig import SimConfig, UNSET, resolve_config
 from repro.core.simulator import (DEFAULT_ENGINE, EventSimulator, SendTask,
                                   SimResult, make_engine)
 from repro.core.topology import Edge, Topology
@@ -315,13 +316,18 @@ def lower_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
 
 
 def simulate_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
-                      nbytes: float, engine: str = DEFAULT_ENGINE,
+                      nbytes: float, engine=UNSET,
                       store=None,
-                      max_sim_segments: Optional[int] = None,
-                      faults=None) -> SimResult:
+                      max_sim_segments=UNSET,
+                      faults=UNSET, *,
+                      config: Optional[SimConfig] = None) -> SimResult:
     """Simulate baseline ``name`` broadcasting ``nbytes`` from ``root``.
 
-    ``engine`` selects the execution path: ``"fast"`` (default) runs the
+    Simulation options come from ``config=SimConfig(...)``; the legacy
+    ``engine=`` / ``max_sim_segments=`` / ``faults=`` kwargs still work
+    through the deprecation shim (bit-identical, one warning per process).
+
+    The engine selects the execution path: ``"fast"`` (default) runs the
     lowered task list through ``CompiledSim.run_lowered`` — the lowering is
     memoized per (algorithm, root, nbytes) on the compiled model (and
     optionally persisted via ``store``), so repeated calls pay only the
@@ -338,6 +344,10 @@ def simulate_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
     and runs the raw task list through the engine's fault loop; the result
     carries degradation metrics in ``SimResult.faults``.
     """
+    cfg = resolve_config(config, engine=engine,
+                         max_sim_segments=max_sim_segments, faults=faults)
+    engine, faults = cfg.engine, cfg.faults
+    max_sim_segments = cfg.max_sim_segments
     sim = make_engine(topo, cm, root, engine=engine)
     if faults:
         tasks = BASELINES[name](topo, root, nbytes)

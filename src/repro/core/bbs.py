@@ -35,6 +35,7 @@ from repro.core.fastsim import CompiledSim, CycleInfo
 from repro.core.intersection import ALL_PORT, FULL_DUPLEX, ConflictModel
 from repro.core.lp import SaturationSolution, solve_saturation_lp
 from repro.core.schedule import Pipeline, build_pipeline
+from repro.core.simconfig import SimConfig, UNSET, resolve_config
 from repro.core.simulator import (DEFAULT_ENGINE, EventSimulator,
                                   simulate_pipeline)
 from repro.core.timeprofile import optimal_group_count, optimal_time
@@ -137,10 +138,15 @@ def _candidate_trees(topo: Topology, sol: SaturationSolution, root: int,
 
 def build_plan(topo: Topology, root: int = 0, mode: str = FULL_DUPLEX,
                lp_solution: Optional[SaturationSolution] = None,
-               probe_groups: int = 4, engine: str = DEFAULT_ENGINE,
+               probe_groups: int = 4, engine=UNSET,
                cycle_scan: int = 64,
-               cm: Optional[ConflictModel] = None) -> BBSPlan:
+               cm: Optional[ConflictModel] = None, *,
+               config: Optional[SimConfig] = None) -> BBSPlan:
     """Build the once-per-(topology, root, mode) BBS plan.
+
+    The probe-simulation engine comes from ``config=SimConfig(...)``; the
+    legacy ``engine=`` kwarg still works through the deprecation shim
+    (``repro.core.simconfig.resolve_config``, one warning per process).
 
     Each candidate pipeline is probed with a ``probe_groups``-group
     simulation: Δ comes from the last two group finishes. The m=1 fill time
@@ -162,6 +168,7 @@ def build_plan(topo: Topology, root: int = 0, mode: str = FULL_DUPLEX,
     one ``ConflictModel`` — and with it the compiled routing layer and the
     pickle object graph — across every root's plan.
     """
+    engine = resolve_config(config, engine=engine).engine
     if cm is None:
         cm = ConflictModel(topo, mode)
     elif cm.topo is not topo or cm.mode != mode:
@@ -181,13 +188,13 @@ def build_plan(topo: Topology, root: int = 0, mode: str = FULL_DUPLEX,
         # probe with packets far above D (paper's asymptotic assumption)
         group_bytes = 256.0 * D * K
         msg = group_bytes * probe_groups
-        t_m, res, delta = simulate_pipeline(topo, cm, pipe, msg, probe_groups,
-                                            root, max_sim_groups=probe_groups,
-                                            engine=engine)
+        t_m, res, delta = simulate_pipeline(
+            topo, cm, pipe, msg, probe_groups, root,
+            config=SimConfig(engine=engine, max_sim_groups=probe_groups))
         # exact T(1): an isolated one-group run, replayed straight from the
         # compiled template under the fast engine
         t1, _, _ = simulate_pipeline(topo, cm, pipe, group_bytes, 1, root,
-                                     engine=engine)
+                                     config=SimConfig(engine=engine))
         cyc = None
         gf = res.group_finish
         probe_steady = len(gf) >= 3 and \
@@ -232,26 +239,35 @@ def _bfs_tree(topo: Topology, root: int) -> arb.Arborescence:
 
 def broadcast_time(plan: BBSPlan, message_bytes: float,
                    num_groups: Optional[int] = None,
-                   max_sim_groups: int = 6,
-                   engine: str = DEFAULT_ENGINE,
-                   faults=None) -> Tuple[float, Dict]:
+                   max_sim_groups=UNSET,
+                   engine=UNSET,
+                   faults=UNSET, *,
+                   config: Optional[SimConfig] = None) -> Tuple[float, Dict]:
     """Simulated BBS broadcast time: Eq.3/Eq.4 rank the candidates and pick
     m_opt; a short prefix simulation arbitrates among the top few (the
     closed form uses measured ratios and can tie within noise).
 
-    With a non-empty ``faults`` schedule the candidate is still selected on
+    Simulation options come from ``config=SimConfig(...)``; the legacy
+    ``max_sim_groups=`` / ``engine=`` / ``faults=`` kwargs still work
+    through the deprecation shim (bit-identical, one warning per process).
+
+    With a non-empty fault schedule the candidate is still selected on
     the fault-free runs (the planner commits to a schedule before the fabric
     breaks), then the winner is re-run under the schedule; the returned time
     is the faulty one and ``info`` gains ``t_fault_free``, ``fault_overhead``,
     ``repair_latency``, ``retries`` and the full ``fault_report``."""
+    cfg = resolve_config(config, max_sim_groups=max_sim_groups,
+                         engine=engine, faults=faults)
+    engine, faults = cfg.engine, cfg.faults
+    max_sim_groups = cfg.max_sim_groups
     results = []
     for cand, m in plan.select(message_bytes):
         if num_groups is not None:
             m = num_groups
         total, res, delta = simulate_pipeline(
             plan.topo, plan.cm, cand.pipeline, message_bytes, m, plan.root,
-            max_sim_groups=max_sim_groups, engine=engine,
-            cycle_hint=getattr(cand, "cycle", None))
+            config=SimConfig(max_sim_groups=max_sim_groups, engine=engine,
+                             cycle_hint=getattr(cand, "cycle", None)))
         results.append((total, cand, m, delta))
     total, cand, m, delta = min(results, key=lambda r: r[0])
     info = dict(num_groups=m, strategy=cand.name,
@@ -262,7 +278,8 @@ def broadcast_time(plan: BBSPlan, message_bytes: float,
     if faults:
         tf, resf, df = simulate_pipeline(
             plan.topo, plan.cm, cand.pipeline, message_bytes, m, plan.root,
-            max_sim_groups=max_sim_groups, engine=engine, faults=faults)
+            config=SimConfig(max_sim_groups=max_sim_groups, engine=engine,
+                             faults=faults))
         info.update(t_fault_free=total, fault_overhead=tf - total,
                     repair_latency=resf.faults.repair_latency,
                     retries=resf.faults.retries,

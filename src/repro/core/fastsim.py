@@ -180,6 +180,59 @@ class PipelineRun:
     cycle: Optional[CycleInfo] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One job of a multi-root workload run (``CompiledSim.run_jobs``): at
+    ``arrival`` (simulated seconds) a broadcast of the lowered list ``ctl``
+    rooted at ``root`` enters the fabric. The same ``ctl`` object may back
+    several jobs — the engine keeps all mutable state per job."""
+
+    arrival: float
+    root: int
+    ctl: CompiledTaskList
+    job_id: int = 0
+
+
+@dataclasses.dataclass
+class JobRun:
+    """Per-job outcome of ``CompiledSim.run_jobs``.
+
+    ``start`` is the admission time of the job's first send (queueing delay
+    = ``start - arrival``); ``finish`` the time its last node held the full
+    message (the job's broadcast completion; degenerately ``arrival`` for a
+    job with nothing to deliver). ``node_finish`` follows the single-run
+    ``SimResult`` semantics with the job's root pinned at ``arrival``."""
+
+    job_id: int
+    arrival: float
+    start: float
+    finish: float
+    node_finish: Dict[int, float]
+    started: int
+    completed: int
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def queue_delay(self) -> float:
+        return self.start - self.arrival
+
+
+@dataclasses.dataclass
+class MultiJobRun:
+    """Result of ``CompiledSim.run_jobs``: per-job outcomes in arrival order
+    plus fabric-wide totals (and one aggregated ``FaultReport`` when a churn
+    schedule was injected)."""
+
+    jobs: List["JobRun"]
+    makespan: float          # last job finish - first job arrival
+    started: int
+    completed: int
+    faults: Optional["FaultReport"] = None
+
+
 class CompiledSim:
     """Resource-constrained simulation of dependent sends on flat arrays."""
 
@@ -732,6 +785,425 @@ class CompiledSim:
                          node_finish=node_finish, deliveries=deliveries,
                          group_finish=gf, started=started,
                          completed=completed, faults=report)
+
+    # -- concurrent multi-job workloads --------------------------------------
+
+    def run_jobs(self, specs: Sequence[JobSpec], faults=None) -> MultiJobRun:
+        """Execute several broadcast jobs concurrently on one shared
+        compiled resource layer.
+
+        Jobs arrive online — arrival events ride the shared
+        ``repro.core.faults`` control heap and apply strictly before task
+        completions at equal times, exactly like kill/heal events — and
+        contend per resource through one shared
+        ``repro.core.routing.Occupancy``: the admission discipline that
+        arbitrates tasks of a single run arbitrates tasks of different jobs
+        unchanged. The scheduling policy is FCFS across jobs, admission rank
+        within a job: the ready heap is keyed ``(job, rank, task)`` with
+        jobs ordered by ``(arrival, job_id)``, so an earlier job's ready
+        tasks get first pick of free resources at every admission pass and a
+        later job's fill whatever remains — work-conserving, no reservation.
+
+        A run with a single job arriving at t=0 replays the exact event
+        schedule of ``run_lowered``'s generic loop (scalar greedy admission
+        throughout — the batched path is bit-identical to it anyway), hence
+        of ``EventSimulator.run`` — asserted in tests/test_workload.py.
+
+        A non-empty ``faults`` schedule merges kill/heal events into the
+        same control heap and runs the de-folded fault discipline of
+        ``_run_faulty`` per job: in-flight aborts and retry wakes,
+        suspension on transiently dead routes, per-job
+        ``repro.core.faults.plan_repair`` re-grafting at every kill — and at
+        job arrival, so a job entering an already-damaged fabric is grafted
+        around the permanent damage at admission time. Ready keys use
+        per-job admission ranks as priorities; repair hops slot in at
+        ``(rank, 1, hop)`` directly after the task they replace. The
+        aggregated ``FaultReport`` sums counters over jobs and concatenates
+        per-job ``lost`` (node, block) pairs (the same pair may appear once
+        per affected job); ``incomplete`` is the union over jobs.
+        """
+        from repro.core import faults as F
+        idx = self.idx
+        topo = self.topo
+        nn = topo.num_nodes
+        specs = sorted(specs, key=lambda s: (s.arrival, s.job_id))
+        nj = len(specs)
+        for sp in specs:
+            sp.ctl.bind(idx)
+        occ = idx.occupancy()
+        busy = occ.busy
+        res_wait = occ.wait
+        caps = idx.caps
+
+        faulty = bool(faults)
+        if faulty:
+            fs = F.FaultState(topo)
+            ctrl, ctrl_seq = F.control_heap(faults)
+            retry_mode = faults.in_flight == F.RETRY
+        else:
+            fs = None
+            ctrl, ctrl_seq = [], 0
+        for j, sp in enumerate(specs):
+            ctrl.append((sp.arrival, ctrl_seq, ("job", j, 0.0)))
+            ctrl_seq += 1
+        heapq.heapify(ctrl)
+
+        # per-job task arrays: views of the lowered lists (clean mode) or
+        # mutable copies the repair planner may grow (fault mode, filled at
+        # activation). State codes share the fault module's WAITING..DONE =
+        # 0..4 prefix, so both modes read the same numerics.
+        active = [False] * nj
+        jn = [sp.ctl.n for sp in specs]
+        jtb = [sp.ctl.total_blocks for sp in specs]
+        jsrc: List[Optional[list]] = [None] * nj
+        jdst = [sp.ctl.dst for sp in specs]
+        jnb = [sp.ctl.nbytes for sp in specs]
+        jblks = [sp.ctl.blks for sp in specs]
+        jdurs = [sp.ctl.durs for sp in specs]
+        jres = [sp.ctl.res_ids for sp in specs]
+        jrank = [sp.ctl.rank for sp in specs]
+        jspans = [sp.ctl.spans if sp.ctl.all_fresh else None for sp in specs]
+        jdep: List[Optional[list]] = [None] * nj
+        jchild: List = [None] * nj
+        jstate = [bytearray(n) for n in jn]
+        jprio: List[Optional[list]] = [None] * nj      # fault mode only
+        jtt: List = [None] * nj                        # fault mode only
+        jcov: List = [None] * nj                       # fault: node -> set
+        jrem: List[Optional[list]] = [None] * nj       # clean countdown
+        jseen: List = [None] * nj                      # clean bitmap path
+        jnf: List[Dict[int, float]] = [dict() for _ in specs]
+        jstart: List[Optional[float]] = [None] * nj
+        jstarted = [0] * nj
+        jcomp = [0] * nj
+        jlost: List[set] = [set() for _ in specs]
+
+        ready: list = []            # (job, key, task) — FCFS across jobs
+        events: list = []           # (time, seq, job, task)
+        suspended: List[Tuple[int, int]] = []
+        repair_ids: set = set()
+        seq = 0
+        now = 0.0
+        applied = aborted = retried = cancelled_n = repaired_n = 0
+        damage = False
+        repair_t0: Optional[float] = None
+        repair_done = 0.0
+        push = heapq.heappush
+        pop = heapq.heappop
+
+        if faulty:
+            def rkey(j: int, i: int):
+                return (j, jprio[j][i], i)
+        else:
+            def rkey(j: int, i: int):
+                return (j, jrank[j][i], i)
+
+        def admit() -> None:
+            nonlocal seq
+            while ready:
+                j, _, i = pop(ready)
+                state = jstate[j]
+                if state[i] != 1:
+                    continue
+                if faulty and not fs.edge_alive(jsrc[j][i], jdst[j][i]):
+                    state[i] = F.SUSPENDED
+                    suspended.append((j, i))
+                    continue
+                rs = jres[j][i]
+                blocked = -1
+                for r in rs:
+                    if busy[r] >= caps[r]:
+                        blocked = r
+                        break
+                if blocked >= 0:
+                    state[i] = 2
+                    w = res_wait[blocked]
+                    if w is None:
+                        res_wait[blocked] = [(j, i)]
+                    else:
+                        w.append((j, i))
+                    continue
+                for r in rs:
+                    busy[r] += 1
+                push(events, (now + jdurs[j][i], seq, j, i))
+                seq += 1
+                jstarted[j] += 1
+                if jstart[j] is None:
+                    jstart[j] = now
+                state[i] = 3
+
+        def free_and_wake(rs) -> None:
+            for r in rs:
+                busy[r] -= 1
+            for r in rs:
+                w = res_wait[r]
+                if w is not None:
+                    res_wait[r] = None
+                    for j2, i2 in w:
+                        if jstate[j2][i2] == 2:
+                            jstate[j2][i2] = 1
+                            push(ready, rkey(j2, i2))
+
+        def repair_job(j: int) -> None:
+            nonlocal cancelled_n, repaired_n, repair_t0
+            state = jstate[j]
+            pending = [i for i in range(len(state))
+                       if state[i] in F.PENDING_STATES]
+            plan = F.plan_repair(fs, jtt[j], pending, jcov[j], specs[j].root)
+            if plan is None:
+                return
+            if repair_t0 is None:
+                repair_t0 = now
+            for i in plan.cancelled:
+                state[i] = F.CANCELLED
+            cancelled_n += len(plan.cancelled)
+            repaired_n += plan.repaired
+            jlost[j].update(plan.lost)
+            tt = jtt[j]
+            res = jres[j]
+            durs = jdurs[j]
+            dep_left = jdep[j]
+            children = jchild[j]
+            for rt in plan.new_tasks:
+                i = tt.append(rt)
+                e = (rt.src, rt.dst)
+                res.append(idx.edge_ids(e))     # may intern new resources
+                lat, bw = idx.edge_cost(e)
+                durs.append(lat + rt.nbytes / bw)
+                occ.grow()
+                dl = sum(1 for d in rt.deps if state[d] != 4)
+                dep_left.append(dl)
+                for d in rt.deps:
+                    children.setdefault(d, []).append(i)
+                repair_ids.add((j, i))
+                state.append(1 if dl == 0 else 0)
+                if dl == 0:
+                    push(ready, rkey(j, i))
+            deps = tt.deps
+            for i2 in sorted(plan.rewires):
+                nd = plan.rewires[i2]
+                old = set(deps[i2])
+                deps[i2] = nd
+                for d in nd:
+                    if d not in old:
+                        children.setdefault(d, []).append(i2)
+                dep_left[i2] = sum(1 for d in nd if state[d] != 4)
+                if dep_left[i2] == 0 and state[i2] == 0:
+                    state[i2] = 1
+                    push(ready, rkey(j, i2))
+
+        def activate(j: int) -> None:
+            sp = specs[j]
+            ctl = sp.ctl
+            root = sp.root
+            active[j] = True
+            jnf[j][root] = sp.arrival
+            if faulty:
+                src = jsrc[j] = list(ctl.src)
+                dst = jdst[j] = list(ctl.dst)
+                nb = jnb[j] = list(ctl.nbytes)
+                blks = jblks[j] = list(ctl.blks)
+                jdurs[j] = list(ctl.durs)
+                jres[j] = list(ctl.res_ids)
+                prio = jprio[j] = [(r,) for r in ctl.rank]
+                deps = [tuple(ds) for ds in ctl.deps]
+                jtt[j] = F.TaskTable(src, dst, nb, blks, list(ctl.grps),
+                                     prio, deps)
+                cov = jcov[j] = {v: set() for v in topo.compute_nodes}
+                cov[root] = set(range(jtb[j]))
+                children: Dict[int, List[int]] = {}
+                for i, ds in enumerate(deps):
+                    for d in ds:
+                        children.setdefault(d, []).append(i)
+                jchild[j] = children
+            else:
+                jsrc[j] = ctl.src
+                rem = [jtb[j]] * nn
+                rem[root] = 0
+                jrem[j] = rem
+                jchild[j] = ctl.children
+            jdep[j] = list(ctl.dep_n)
+            state = jstate[j]
+            for i in range(jn[j]):
+                if not jdep[j][i]:
+                    state[i] = 1
+                    push(ready, rkey(j, i))
+            if faulty and damage:
+                # the fabric broke before this job arrived: graft its plan
+                # around the permanent damage at admission time
+                repair_job(j)
+
+        def apply_control(op) -> None:
+            nonlocal ctrl_seq, applied, aborted, retried, damage
+            kind = op[0]
+            if kind == "job":
+                activate(op[1])
+                return
+            if kind == "retry":
+                j, i = op[1]
+                if jstate[j][i] == F.ABORTED:
+                    jstate[j][i] = 1
+                    retried += 1
+                    push(ready, rkey(j, i))
+                return
+            if kind == "heal_link":
+                fs.heal_link(op[1])
+                wake = sorted(suspended)
+                suspended.clear()
+                for j, i in wake:
+                    if jstate[j][i] == F.SUSPENDED:
+                        jstate[j][i] = 1
+                        push(ready, rkey(j, i))
+                return
+            if kind == "kill_link":
+                fs.kill_link(op[1], op[2])
+            else:
+                fs.kill_node(op[1])
+            applied += 1
+            damage = True
+            for j in range(nj):
+                if not active[j]:
+                    continue
+                state = jstate[j]
+                src = jsrc[j]
+                dst = jdst[j]
+                for i in range(len(state)):
+                    if state[i] != 3:
+                        continue
+                    if fs.edge_alive(src[i], dst[i]):
+                        continue
+                    if not retry_mode and dst[i] not in fs.dead_nodes:
+                        continue        # completes-then-dies: let it land
+                    state[i] = F.ABORTED
+                    aborted += 1
+                    free_and_wake(jres[j][i])
+                    push(ctrl, (now + faults.retry_timeout, ctrl_seq,
+                                ("retry", (j, i), 0.0)))
+                    ctrl_seq += 1
+            for j in range(nj):
+                if active[j]:
+                    repair_job(j)
+
+        while True:
+            next_t = events[0][0] if events else math.inf
+            while ctrl and ctrl[0][0] <= next_t:
+                t_c, _, op = pop(ctrl)
+                if t_c > now:
+                    now = t_c
+                apply_control(op)
+                admit()
+                next_t = events[0][0] if events else math.inf
+            if not events:
+                if ctrl:
+                    continue
+                break
+            now, _, j, i = pop(events)
+            state = jstate[j]
+            if state[i] != 3:
+                continue               # aborted/cancelled mid-flight
+            state[i] = 4
+            jcomp[j] += 1
+            rs = jres[j][i]
+            for r in rs:
+                busy[r] -= 1
+            d = jdst[j][i]
+            if faulty:
+                cd = jcov[j][d]
+                cd.update(b for b in range(*jblks[j][i]) if b not in cd)
+                nf = jnf[j]
+                if d not in nf and len(cd) >= jtb[j]:
+                    nf[d] = now
+                if (j, i) in repair_ids and now > repair_done:
+                    repair_done = now
+            else:
+                rem_l = jrem[j]
+                rem = rem_l[d]
+                if rem > 0:
+                    spans = jspans[j]
+                    if spans is not None:
+                        rem -= spans[i]
+                        rem_l[d] = rem
+                        if rem <= 0 and d not in jnf[j]:
+                            jnf[j][d] = now
+                    else:
+                        sb_l = jseen[j]
+                        if sb_l is None:
+                            sb_l = jseen[j] = [None] * nn
+                        sb = sb_l[d]
+                        if sb is None:
+                            sb = sb_l[d] = bytearray(jtb[j])
+                        fresh = 0
+                        for b in range(*jblks[j][i]):
+                            if not sb[b]:
+                                sb[b] = 1
+                                fresh += 1
+                        if fresh:
+                            rem -= fresh
+                            rem_l[d] = rem
+                            if rem <= 0 and d not in jnf[j]:
+                                jnf[j][d] = now
+            chs = jchild[j].get(i, ()) if faulty else (jchild[j][i] or ())
+            dep_left = jdep[j]
+            for c in chs:
+                dl = dep_left[c] - 1
+                dep_left[c] = dl
+                if not dl and state[c] == 0:
+                    state[c] = 1
+                    push(ready, rkey(j, c))
+            for r in rs:
+                w = res_wait[r]
+                if w is not None:
+                    res_wait[r] = None
+                    for j2, i2 in w:
+                        if jstate[j2][i2] == 2:
+                            jstate[j2][i2] = 1
+                            push(ready, rkey(j2, i2))
+            admit()
+
+        if faulty:
+            stranded = [(j, i) for j in range(nj)
+                        for i in range(len(jstate[j]))
+                        if jstate[j][i] not in (4, F.CANCELLED)]
+            assert not stranded, \
+                f"{len(stranded)} tasks stranded under faults: {stranded[:5]}"
+        else:
+            for j in range(nj):
+                assert jcomp[j] == jn[j], \
+                    f"job {specs[j].job_id}: {jn[j] - jcomp[j]} tasks " \
+                    f"never ran — dependency cycle"
+                bad = [v for v in range(nn) if jrem[j][v] > 0]
+                assert not bad, \
+                    f"job {specs[j].job_id}: nodes {bad[:5]} never got " \
+                    f"the full message"
+
+        runs = []
+        for j, sp in enumerate(specs):
+            nf = jnf[j]
+            runs.append(JobRun(
+                job_id=sp.job_id, arrival=sp.arrival,
+                start=jstart[j] if jstart[j] is not None else sp.arrival,
+                finish=max(nf.values()) if nf else sp.arrival,
+                node_finish=nf, started=jstarted[j], completed=jcomp[j]))
+        report = None
+        if faulty:
+            lost: List[Tuple[int, int]] = []
+            for j in range(nj):
+                lost.extend(sorted(jlost[j]))
+            report = F.FaultReport(
+                events_applied=applied, aborted=aborted, retries=retried,
+                cancelled=cancelled_n, repair_tasks=len(repair_ids),
+                repaired=repaired_n,
+                dead_nodes=tuple(sorted(fs.dead_nodes)),
+                lost=tuple(lost),
+                incomplete=tuple(sorted(
+                    {v for j in range(nj) for v in topo.compute_nodes
+                     if v not in fs.dead_nodes and v not in jnf[j]})),
+                repair_latency=(repair_done - repair_t0)
+                if repair_t0 is not None and repair_done > 0.0 else 0.0)
+        first = min((sp.arrival for sp in specs), default=0.0)
+        last = max((r.finish for r in runs), default=first)
+        return MultiJobRun(jobs=runs, makespan=last - first,
+                           started=sum(jstarted), completed=sum(jcomp),
+                           faults=report)
 
     # -- cyclic pipelines ----------------------------------------------------
 

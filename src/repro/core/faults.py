@@ -458,6 +458,35 @@ class FaultReport:
                 f"repair_tasks={self.repair_tasks} lost={len(self.lost)} "
                 f"repair_latency={self.repair_latency:.3e}s")
 
+    def to_dict(self) -> dict:
+        """A stable JSON-safe form; ``from_dict(to_dict())`` round-trips to
+        an equal report, including through ``json.dumps``/``loads`` (the
+        tuple fields serialize as lists and are re-tupled on the way in)."""
+        return {
+            "events_applied": self.events_applied,
+            "aborted": self.aborted,
+            "retries": self.retries,
+            "cancelled": self.cancelled,
+            "repair_tasks": self.repair_tasks,
+            "repaired": self.repaired,
+            "dead_nodes": list(self.dead_nodes),
+            "lost": [[v, b] for v, b in self.lost],
+            "incomplete": list(self.incomplete),
+            "repair_latency": self.repair_latency,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultReport":
+        return cls(
+            events_applied=d["events_applied"], aborted=d["aborted"],
+            retries=d["retries"], cancelled=d["cancelled"],
+            repair_tasks=d["repair_tasks"], repaired=d["repaired"],
+            dead_nodes=tuple(d["dead_nodes"]),
+            lost=tuple((v, b) for v, b in d["lost"]),
+            incomplete=tuple(d["incomplete"]),
+            repair_latency=d["repair_latency"],
+        )
+
 
 @dataclasses.dataclass
 class DeliveryCheck:

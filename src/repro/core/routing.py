@@ -318,6 +318,43 @@ class CompiledTopology:
         return CompiledTaskList(self, tasks, total_blocks,
                                 detect_segments=detect_segments)
 
+    def occupancy(self) -> "Occupancy":
+        """A fresh shared-occupancy state over this compiled resource table
+        (see ``Occupancy``) — the per-run busy/wait vectors a multi-instance
+        event loop charges every concurrently executing lowered task list
+        through."""
+        return Occupancy(self)
+
+
+class Occupancy:
+    """Shared resource-occupancy state for concurrent lowered executions.
+
+    One broadcast per run, the engines keep their busy/wait vectors as loop
+    locals; a multi-instance loop (``CompiledSim.run_jobs``) instead charges
+    *every* concurrently executing lowered task list through one of these, so
+    jobs contend per resource exactly as tasks of a single run do:
+
+      * ``busy`` — slots in use per dense resource id;
+      * ``wait`` — per-resource wake queue of blocked global task keys (None
+        when empty, the engines' representation).
+
+    ``grow()`` re-sizes both after interning added resources (fault repair
+    hops route over edges no lowered list touched).
+    """
+
+    __slots__ = ("ct", "busy", "wait")
+
+    def __init__(self, ct: CompiledTopology):
+        self.ct = ct
+        self.busy: List[int] = [0] * ct.num_resources()
+        self.wait: List[Optional[list]] = [None] * ct.num_resources()
+
+    def grow(self) -> None:
+        extra = self.ct.num_resources() - len(self.busy)
+        if extra > 0:
+            self.busy.extend([0] * extra)
+            self.wait.extend([None] * extra)
+
 
 class CompiledTemplate:
     """One pipeline group lowered to flat arrays on a ``CompiledTopology``.

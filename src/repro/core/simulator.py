@@ -55,6 +55,8 @@ from repro.core import faults as _faults
 from repro.core.faults import FaultReport, FaultSchedule
 from repro.core.intersection import ConflictModel
 from repro.core.schedule import Pipeline
+from repro.core.simconfig import DEFAULT_ENGINE, SimConfig, UNSET, \
+    resolve_config
 from repro.core.topology import Edge, Topology
 
 
@@ -96,10 +98,38 @@ class SimResult:
             acc[min(bins - 1, int(t / w))] += nb
         return [((i + 0.5) * w, acc[i] / w) for i in range(bins)]
 
+    def to_dict(self) -> dict:
+        """A stable JSON-safe form: ``SimResult.from_dict(r.to_dict()) == r``
+        and ``json.loads(json.dumps(r.to_dict()))`` round-trips losslessly
+        (node ids are ints, times floats — both JSON-native). Consumed by
+        the simbench workload cell and ``check_regression`` instead of
+        ad-hoc field picking."""
+        return {
+            "finish_time": self.finish_time,
+            "node_finish": [[v, t] for v, t in sorted(
+                self.node_finish.items())],
+            "deliveries": [[t, nb] for t, nb in self.deliveries],
+            "group_finish": list(self.group_finish),
+            "started": self.started,
+            "completed": self.completed,
+            "faults": self.faults.to_dict() if self.faults else None,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SimResult":
+        faults = d.get("faults")
+        return cls(
+            finish_time=d["finish_time"],
+            node_finish={v: t for v, t in d["node_finish"]},
+            deliveries=[(t, nb) for t, nb in d["deliveries"]],
+            group_finish=list(d["group_finish"]),
+            started=d["started"],
+            completed=d["completed"],
+            faults=FaultReport.from_dict(faults) if faults else None,
+        )
+
 
 _WAITING, _READY, _BLOCKED, _RUNNING, _DONE = range(5)
-
-DEFAULT_ENGINE = "fast"
 
 
 def make_engine(topo: Topology, cm: ConflictModel, root: int,
@@ -600,14 +630,21 @@ def delta_star(topo: Topology, cm: ConflictModel, pipe: Pipeline,
 
 def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
                       message_bytes: float, num_groups: int, root: int,
-                      max_sim_groups: int = 6, engine: str = DEFAULT_ENGINE,
-                      cycle_detect: bool = True,
-                      cycle_scan_groups: Optional[int] = None,
-                      cycle_hint=None,
-                      faults: Optional[FaultSchedule] = None,
+                      max_sim_groups=UNSET, engine=UNSET,
+                      cycle_detect=UNSET,
+                      cycle_scan_groups=UNSET,
+                      cycle_hint=UNSET,
+                      faults=UNSET,
+                      *, config: Optional[SimConfig] = None,
                       ) -> Tuple[float, SimResult, float]:
     """Simulate a pipelined broadcast of `message_bytes` split into
     `num_groups` groups (each group split across trees by tree weights).
+
+    Simulation options come from ``config=SimConfig(...)``; the individual
+    keywords (``engine=``, ``faults=``, the cycle options, defaults
+    unchanged) remain as a deprecated compatibility shim resolved through
+    ``repro.core.simconfig.resolve_config`` — bit-identical results, one
+    ``DeprecationWarning`` per process.
 
     Returns (total_time, sim_result, delta). When num_groups exceeds
     `max_sim_groups`, a prefix is simulated and Theorem 2 extrapolates:
@@ -627,6 +664,13 @@ def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
     ``num_groups`` groups are expanded and run through the chosen engine's
     fault-aware loop; the returned result carries ``SimResult.faults``.
     """
+    cfg = resolve_config(config, max_sim_groups=max_sim_groups,
+                         engine=engine, cycle_detect=cycle_detect,
+                         cycle_scan_groups=cycle_scan_groups,
+                         cycle_hint=cycle_hint, faults=faults)
+    engine, faults = cfg.engine, cfg.faults
+    max_sim_groups = cfg.max_sim_groups
+
     weights = [t.weight for t in pipe.trees]
     group_bytes = message_bytes / num_groups
     packet_bytes = [group_bytes * w for w in weights]
@@ -644,8 +688,9 @@ def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
         from repro.core.fastsim import CompiledSim
         run = CompiledSim(topo, cm, root).run_pipeline(
             pipe, packet_bytes, num_groups, max_sim_groups=max_sim_groups,
-            cycle_detect=cycle_detect, cycle_scan_groups=cycle_scan_groups,
-            cycle_hint=cycle_hint)
+            cycle_detect=cfg.cycle_detect,
+            cycle_scan_groups=cfg.cycle_scan_groups,
+            cycle_hint=cfg.cycle_hint)
         if run.complete:
             return run.res.finish_time, run.res, run.delta
         delta = thm2_delta_floor(run.delta,

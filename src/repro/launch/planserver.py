@@ -194,6 +194,24 @@ class PlanServer:
             pool = self._pool
         return pool.submit(self._plan_for, fp, topo, root, mode)
 
+    def prefetch_jobs(self, topo, jobs_or_roots,
+                      mode: Optional[str] = None) -> Dict[int, Future]:
+        """Warm the plan caches for a whole workload before its jobs start
+        arriving: deduplicate the jobs' roots to their orbit-canonical
+        representatives (one build covers every root in an orbit — the
+        non-canonical roots are O(tasks) relabels at request time) and
+        ``prefetch`` each representative once. ``jobs_or_roots`` is any
+        iterable of ints or of objects with a ``root`` attribute (e.g.
+        ``repro.workload.BroadcastJob``). Returns ``{canonical_root:
+        Future}`` — the workload engine collects them before admission so
+        plan-build latency never counts as queueing delay."""
+        mode = mode or self.default_mode
+        fp, topo = self._resolve(topo)
+        aut = topo.automorphisms()
+        canon = {aut.canonical_root(int(getattr(it, "root", it))): None
+                 for it in jobs_or_roots}
+        return {c: self.prefetch(fp, c, mode) for c in canon}
+
     # -- internals ------------------------------------------------------------
 
     def _plan_for(self, fp: str, topo: Topology, root: int, mode: str):

@@ -1,0 +1,166 @@
+"""The unified simulation API: facade, config threading, serialization.
+
+Three contracts:
+
+  * ``repro.api.compile`` is a pure convenience — every facade method is
+    bit-identical to the module-level function it delegates to, with the
+    same shared ``ConflictModel``;
+  * the legacy per-function keywords (``engine=``, ``faults=``,
+    ``max_sim_groups=``, ...) resolve through
+    ``repro.core.simconfig.resolve_config`` to the same results as
+    ``config=SimConfig(...)``, warn exactly once per process, and reject
+    ambiguous mixed calls;
+  * ``SimResult`` / ``FaultReport`` / ``WorkloadReport`` survive
+    ``to_dict`` -> JSON -> ``from_dict`` unchanged.
+"""
+
+import json
+import warnings
+
+import pytest
+
+from repro import api
+from repro.core import faults as F
+from repro.core import topology as T
+from repro.core.baselines import simulate_baseline
+from repro.core.bbs import broadcast_time, build_plan
+from repro.core.faults import FaultReport
+from repro.core.intersection import FULL_DUPLEX, ConflictModel
+from repro.core.simconfig import (DEFAULT_ENGINE, SimConfig,
+                                  reset_legacy_warning, resolve_config)
+from repro.core.simulator import SimResult, simulate_pipeline
+
+
+@pytest.fixture(scope="module")
+def setup():
+    topo = T.mesh2d(4, 4)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    plan = build_plan(topo, root=0, cm=cm)
+    return topo, cm, plan
+
+
+# -- facade ------------------------------------------------------------------
+
+def test_facade_matches_module_functions(setup):
+    topo, cm, plan = setup
+    model = api.compile(T.mesh2d(4, 4))
+    t_facade, info_f = model.broadcast_time(0, 1e6)
+    t_direct, info_d = broadcast_time(plan, 1e6)
+    assert t_facade == t_direct and info_f["strategy"] == info_d["strategy"]
+
+    res_f = model.simulate_baseline("binomial", 0, 1e6)
+    res_d = simulate_baseline(topo, cm, "binomial", 0, 1e6)
+    assert res_f.finish_time == res_d.finish_time
+    assert res_f.node_finish == res_d.node_finish
+
+    cand, m = plan.select(1e6, top=1)[0]
+    out_f = model.simulate_pipeline(cand.pipeline, 1e6, m, 0)
+    out_d = simulate_pipeline(topo, cm, cand.pipeline, 1e6, m, 0)
+    assert out_f[0] == out_d[0]
+
+
+def test_facade_shares_one_compiled_layer():
+    model = api.compile(T.mesh2d(4, 4))
+    assert model.compiled is model.cm.compiled()
+    assert isinstance(model.fingerprint, str) and model.fingerprint
+
+
+def test_facade_server_is_lazy_and_orbit_canonical():
+    model = api.compile(T.mesh2d(4, 4))
+    assert model.server is None
+    srv = model.ensure_server()
+    assert srv is model.ensure_server()         # idempotent
+    p0, p15 = model.plan(0), model.plan(15)     # same corner orbit
+    assert srv.stats.builds == 1
+    t0, _ = broadcast_time(p0, 1e6)
+    t15, _ = broadcast_time(p15, 1e6)
+    assert t0 == t15                             # relabel preserves time
+
+
+# -- legacy-keyword shim ------------------------------------------------------
+
+def test_legacy_kwargs_bit_identical_to_config(setup):
+    topo, cm, plan = setup
+    cand, m = plan.select(1e6, top=1)[0]
+
+    old = simulate_pipeline(topo, cm, cand.pipeline, 1e6, m, 0,
+                            max_sim_groups=m, engine="fast")
+    new = simulate_pipeline(topo, cm, cand.pipeline, 1e6, m, 0,
+                            config=SimConfig(max_sim_groups=m,
+                                             engine="fast"))
+    assert old[0] == new[0]
+    assert old[1].node_finish == new[1].node_finish
+
+    t_old, _ = broadcast_time(plan, 1e6, engine="reference")
+    t_new, _ = broadcast_time(plan, 1e6,
+                              config=SimConfig(engine="reference"))
+    assert t_old == t_new
+
+    r_old = simulate_baseline(topo, cm, "binomial", 0, 1e6, engine="fast")
+    r_new = simulate_baseline(topo, cm, "binomial", 0, 1e6,
+                              config=SimConfig(engine="fast"))
+    assert r_old.finish_time == r_new.finish_time
+    assert r_old.node_finish == r_new.node_finish
+
+
+def test_legacy_kwargs_warn_exactly_once(setup):
+    topo, cm, plan = setup
+    reset_legacy_warning()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        simulate_baseline(topo, cm, "binomial", 0, 64e3, engine="fast")
+        simulate_baseline(topo, cm, "binomial", 0, 64e3, engine="fast")
+        broadcast_time(plan, 64e3, engine="fast")
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "config=" in str(dep[0].message)
+
+
+def test_config_plus_legacy_kwarg_is_an_error(setup):
+    topo, cm, plan = setup
+    with pytest.raises(TypeError, match="either config="):
+        simulate_baseline(topo, cm, "binomial", 0, 64e3, engine="fast",
+                          config=SimConfig())
+    with pytest.raises(TypeError, match="either config="):
+        broadcast_time(plan, 64e3, max_sim_groups=4, config=SimConfig())
+
+
+def test_resolve_config_defaults():
+    cfg = resolve_config(None)
+    assert cfg == SimConfig()
+    assert cfg.engine == DEFAULT_ENGINE
+    assert cfg.max_sim_groups == 6 and cfg.cycle_detect
+
+
+# -- serialization ------------------------------------------------------------
+
+def test_simresult_json_round_trip(setup):
+    topo, cm, _ = setup
+    res = simulate_baseline(topo, cm, "binomial", 0, 1e6)
+    back = SimResult.from_dict(json.loads(json.dumps(res.to_dict())))
+    assert back.finish_time == res.finish_time
+    assert back.node_finish == res.node_finish
+    assert back.deliveries == res.deliveries
+    assert back.started == res.started and back.completed == res.completed
+    assert back.faults is None
+
+
+def test_simresult_with_faultreport_round_trip(setup):
+    topo, cm, _ = setup
+    link = topo.links((0, 1))[0]
+    sched = F.FaultSchedule.kill_link(link, time=1e-6)
+    res = simulate_baseline(topo, cm, "binomial", 0, 1e6,
+                            config=SimConfig(faults=sched))
+    assert res.faults is not None
+    back = SimResult.from_dict(json.loads(json.dumps(res.to_dict())))
+    assert back.faults == res.faults
+    assert back.finish_time == res.finish_time
+
+
+def test_faultreport_round_trip_standalone():
+    rep = FaultReport(events_applied=2, aborted=1, retries=1, cancelled=3,
+                      repair_tasks=4, repaired=3, dead_nodes=(5,),
+                      lost=((5, 0), (5, 1)), incomplete=(7,),
+                      repair_latency=1.5e-6)
+    back = FaultReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert back == rep
