@@ -15,6 +15,9 @@ Cells:
   baseline           routed-baseline raw loop, geometric mean over algorithms
                      (vs the seed-era generic ``CompiledSim.run`` path)
   baseline_<algo>    the same, per algorithm (srda / pipeline / bine / glf)
+  kernel_sweep       kernel-engine adaptive dispatch on a grid-sweep row
+                     (all task-list families x two message sizes) vs the
+                     generic round loop on the same lowered lists
   plan_cache_<topo>  symmetry-orbit pack assembly speedup vs per-root builds
   plan_cache_hit_rate  warm hit rate of the PlanServer request stream
   build_plan_seconds   wall time of one plan build — gated as a *ceiling*
@@ -62,6 +65,9 @@ def extract_cells(records) -> dict:
     cells = {}
     for rec in records:
         name, engine = rec.get("name"), rec.get("engine")
+        if name == "kernel_sweep":
+            cells["kernel_sweep"] = rec["speedup"]
+            continue
         if engine != "fast":
             continue
         if name in ("pipeline", "raw_pipeline"):

@@ -43,6 +43,19 @@ so the perf trajectory is tracked across PRs (uploaded as a CI artifact by
                  build). Also serves a root-symmetric request stream
                  through ``repro.launch.planserver.PlanServer`` and
                  records the warm-cache hit rate (gated >= 0.9)
+  kernel_sweep   the kernel engine's adaptive dispatch
+                 (``repro.core.kernelsim.KernelSim``) running a grid-sweep
+                 row — every task-list family x two message sizes on one
+                 mesh — vs the same lowered lists forced down the plain
+                 generic round loop (``seg = None`` copies: the path every
+                 list took before folding). Bit-identity is asserted per
+                 (family, size) before timing; the gated headline is the
+                 aggregate tasks/s ratio, dominated by the chain-family
+                 fold — per-family components are printed so the cell
+                 cannot hide a regression in the flat families. On this
+                 single-core CI host the dispatch routes to the numpy
+                 paths (the jitted core pays off on multi-device hosts and
+                 is exercised for exactness in tests/test_kernel.py)
   workload       concurrent multi-root broadcast workloads
                  (``repro.workload``): fixed-seed offered-load sweep over
                  one corner orbit of the mesh; the sustained jobs/s at the
@@ -463,6 +476,80 @@ def bench_baselines(topo_name: str, n: int, message_bytes: float,
     return geomean
 
 
+def bench_kernel_sweep(topo_name: str, n: int, repeats: int) -> float:
+    """The kernel engine's adaptive dispatch on a grid-sweep row vs the
+    generic round loop on the same lowered lists (see the module
+    docstring). Returns the gated aggregate tasks/s ratio."""
+    import copy
+
+    from repro.core import kernelsim as KS
+    from repro.core import topology as T
+    from repro.core.baselines import lower_baseline
+    from repro.core.fastsim import CompiledSim
+    from repro.core.intersection import FULL_DUPLEX, ConflictModel
+
+    topo = T.by_name(topo_name, n)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    sim = CompiledSim(topo, cm, 0)
+    ks = KS.KernelSim(topo, cm, 0)
+    families = ("binomial", "srda", "glf", "bine", "pipeline")
+    sizes = (4e6, 64e6)
+    cells = []                       # (family, ctl, generic-forced copy)
+    n_tasks = 0
+    for fam in families:
+        for size in sizes:
+            ctl = lower_baseline(topo, cm, fam, 0, size)
+            cc = copy.copy(ctl)
+            cc.seg = None            # the pre-fold generic round loop
+            cc._tpl = None
+            rk = ks.run_lowered(ctl)
+            rg = sim.run_lowered(cc)
+            assert rk.finish_time == rg.finish_time \
+                and rk.node_finish == rg.node_finish \
+                and rk.deliveries == rg.deliveries, \
+                f"kernel_sweep {fam}@{size:.0e}: engines diverged"
+            cells.append((fam, ctl, cc))
+            n_tasks += ctl.n
+
+    def run_kernel():
+        for _, ctl, _ in cells:
+            ks.run_lowered(ctl)
+
+    def run_generic():
+        for _, _, cc in cells:
+            sim.run_lowered(cc)
+
+    t_gen, t_ker = _best_of_cpu_interleaved([run_generic, run_kernel],
+                                            repeats)
+    speedup = t_gen / t_ker
+    tag = f"{topo_name}_{n}"
+    # per-family components (single timed pass, transparency only): the
+    # aggregate win is dominated by the chain-family fold; the flat
+    # families run the same generic numpy loop on this 1-core host
+    for fam in families:
+        fs = [c for c in cells if c[0] == fam]
+        t0 = time.process_time()
+        for _, ctl, _ in fs:
+            ks.run_lowered(ctl)
+        tk = time.process_time() - t0
+        t0 = time.process_time()
+        for _, _, cc in fs:
+            sim.run_lowered(cc)
+        tg = time.process_time() - t0
+        folded = bool(fs[0][1].seg is not None and fs[0][1].seg.foldable)
+        print(f"kernel_sweep_{tag}_{fam},{tg / max(tk, 1e-12):.2f},x "
+              f"(folded={folded})")
+    print(f"kernel_sweep_generic_{tag},{t_gen * 1e6:.0f},"
+          f"{n_tasks / t_gen:.0f} tasks/s")
+    print(f"kernel_sweep_kernel_{tag},{t_ker * 1e6:.0f},"
+          f"{n_tasks / t_ker:.0f} tasks/s (bit-identical)")
+    print(f"kernel_sweep_speedup_{tag},{speedup:.2f},x")
+    _record("kernel_sweep", "kernel", topo_name, n, 0, n_tasks / t_ker,
+            speedup, families=list(families), sizes=list(sizes),
+            n_tasks=n_tasks)
+    return speedup
+
+
 def bench_churn(topo_name: str, n: int, message_bytes: float) -> None:
     """Degradation under a single mid-broadcast link kill: clean vs faulty
     finish time, T(m) overhead, repair latency and retry count for the srda
@@ -725,6 +812,7 @@ def main(argv=None) -> int:
     n = args.n or (64 if args.smoke else 256)
     bench_engines(args.topo, n, args.groups, args.message, args.repeats)
     bench_baselines(args.topo, n, args.message, args.repeats)
+    bench_kernel_sweep(args.topo, n, args.repeats)
     bench_churn(args.topo, 64 if args.smoke else n, args.message)
     bench_cycle(args.repeats)
     bench_build_plan(args.topo, 64 if args.smoke else 128)

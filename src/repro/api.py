@@ -21,7 +21,10 @@ through::
 Simulation options ride a single ``config=SimConfig(...)`` object
 (``repro.core.simconfig``) rather than per-function keyword sprawl; the
 old per-function keywords still work everywhere through a deprecation
-shim with bit-identical results.
+shim with bit-identical results. ``SimConfig(engine="kernel")`` routes
+baseline task lists through the jax-jitted round core
+(``repro.core.kernelsim``) with the numpy engine as bit-identical
+fallback everywhere the kernel does not apply.
 
 The facade adds no policy of its own — every method delegates to the
 underlying module function, so results are bit-identical to calling

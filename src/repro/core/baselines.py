@@ -331,9 +331,11 @@ def simulate_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
     lowered task list through ``CompiledSim.run_lowered`` — the lowering is
     memoized per (algorithm, root, nbytes) on the compiled model (and
     optionally persisted via ``store``), so repeated calls pay only the
-    event loop; ``"reference"`` runs the ``EventSimulator`` oracle on a
-    freshly generated task list. Both produce bit-identical results
-    (asserted in tests/test_engine_equiv.py).
+    event loop; ``"kernel"`` runs the same lowered list through the
+    jax-jitted round core (``repro.core.kernelsim``, numpy fallback when
+    jax is unavailable); ``"reference"`` runs the ``EventSimulator`` oracle
+    on a freshly generated task list. All produce bit-identical results
+    (asserted in tests/test_engine_equiv.py and tests/test_kernel.py).
 
     ``max_sim_segments`` (fast engine only) enables the segment-analytic
     path of ``CompiledSim.run_task_list`` for fold-eligible lists: exact
@@ -353,7 +355,7 @@ def simulate_baseline(topo: Topology, cm: ConflictModel, name: str, root: int,
         tasks = BASELINES[name](topo, root, nbytes)
         return sim.run(tasks, total_blocks=max(t.blk[1] for t in tasks),
                        faults=faults)
-    if engine == "fast":
+    if engine in ("fast", "kernel"):
         ctl = lower_baseline(topo, cm, name, root, nbytes, store=store)
         if max_sim_segments is not None:
             return sim.run_task_list(lowered=ctl,

@@ -282,22 +282,28 @@ class CompiledSim:
         """Run a lowered task list (no per-call setup; ``ctl`` is not
         mutated and may be shared across engines of the same model).
 
-        Fold-eligible segmented lists (``ctl.seg.foldable`` — the chain
-        pipeline family) execute through the folded template core: one live
-        instance per segment-template task, vectorized whole-frontier
-        admission, the identical event schedule as the generic loop (the
-        PR-4 folding argument verbatim — instances of one template task
-        share resources and durations and are admitted strictly in segment
-        order). Everything else takes the generic flat-array loop."""
+        Fold-eligible segmented lists (``ctl.seg.foldable``) execute through
+        a folded instance core: the *pure* subclass (the chain pipeline
+        family) through the template core — one live instance per
+        segment-template task, vectorized whole-frontier admission, the
+        identical event schedule as the generic loop (the PR-4 folding
+        argument verbatim — instances of one template task share resources
+        and durations and are admitted strictly in segment order) — and the
+        extended class (prefix region + prev-segment dependency chains,
+        srda's ring allgather) through the folded-list loop
+        (``_run_folded_list``), same argument with the prefix tasks as
+        scalar participants. Everything else takes the generic flat-array
+        loop."""
         ctl.bind(self.idx)
         seg = ctl.seg
-        if seg is not None and seg.foldable \
-                and seg.cover_bad <= {self.root}:
-            tpl, durs, nb = ctl.fold_template(self.idx)
-            res, _, _ = self._run_template(tpl, durs, nb, seg.q)
-            if not ctl.has_groups:
-                res = dataclasses.replace(res, group_finish=[])
-            return res
+        if seg is not None and seg.foldable:
+            if seg.pure and seg.cover_bad <= {self.root}:
+                tpl, durs, nb = ctl.fold_template(self.idx)
+                res, _, _ = self._run_template(tpl, durs, nb, seg.q)
+                if not ctl.has_groups:
+                    res = dataclasses.replace(res, group_finish=[])
+                return res
+            return self._run_folded_list(ctl)
         return self._run_generic(ctl)
 
     def run_task_list(self, tasks: Optional[Sequence[SendTask]] = None, *,
@@ -321,13 +327,17 @@ class CompiledSim:
                                                              total_blocks)
         ctl.bind(self.idx)
         seg = ctl.seg
-        foldable = seg is not None and seg.foldable \
-            and seg.cover_bad <= {self.root}
-        if not foldable or max_sim_segments is None \
+        # only the pure fold subclass is analytics-eligible: the segment
+        # template alone replays an extended (prefix-region) list's schedule
+        # incorrectly — prefix tasks contend with the early segments — so
+        # those lists always simulate completely (through the folded loop)
+        pure = seg is not None and seg.pure and seg.cover_bad <= {self.root}
+        if not pure or max_sim_segments is None \
                 or seg.q <= max(2, max_sim_segments):
             res = self.run_lowered(ctl)
             gf = res.group_finish
-            return TaskListRun(res=res, sim_segments=seg.q if foldable else 0,
+            folded = seg is not None and seg.foldable
+            return TaskListRun(res=res, sim_segments=seg.q if folded else 0,
                                delta=gf[-1] - gf[-2] if len(gf) >= 2 else 0.0)
         tpl, durs, nb = ctl.fold_template(self.idx)
         run = self._cycle_exact(tpl, durs, nb, seg.q,
@@ -347,7 +357,19 @@ class CompiledSim:
     def _run_generic(self, ctl: CompiledTaskList) -> SimResult:
         """The generic flat-array event loop over a lowered list — the exact
         reference event schedule (same ranks, ties, IEEE arithmetic), with
-        batched whole-frontier admission on wide frontiers."""
+        batched whole-frontier admission on wide frontiers.
+
+        Contended-path contract (stated once here; the folded-list and
+        fault loops follow it too): a task that finds any resource at
+        capacity parks on the *first* busy resource only. While that
+        resource stays busy, every wake the reference performs — on the
+        other busy resources' frees — fails admission right back here, so
+        the admitted set at every event, and hence the entire schedule, is
+        unchanged; what is saved is re-blocking long wait queues across k
+        resources per task. (``_run_template`` is the deliberate exception:
+        its fold keeps wait queues at one live instance per template task,
+        so it parks on every busy resource like the reference — see its
+        docstring.)"""
         idx = self.idx
         n = ctl.n
         total_blocks = ctl.total_blocks
@@ -422,12 +444,8 @@ class CompiledSim:
                         blocked = r
                         break
                 if blocked >= 0:
-                    # wait on the *first* busy resource only: while it stays
-                    # busy, every wake the reference performs (on the other
-                    # busy resources' frees) fails admission right here, so
-                    # the admitted set at every event — and hence the entire
-                    # schedule — is unchanged; the thrash of re-blocking a
-                    # long wait queue across k resources per task is not
+                    # the contended-path contract (docstring above): park on
+                    # the first busy resource only
                     state[i] = 2
                     w = res_wait[blocked]
                     if w is None:
@@ -507,6 +525,256 @@ class CompiledSim:
                          group_finish=gf, started=started,
                          completed=completed)
 
+    def _run_folded_list(self, ctl: CompiledTaskList) -> SimResult:
+        """Folded execution of an extended fold-eligible list: a prefix
+        region plus ``q`` instances of one ``seg_len``-task segment, with
+        dependency chains into the previous segment (srda's ring allgather
+        is the canonical shape). The scheduling state is one live instance
+        per segment-template position plus the prefix tasks as scalar
+        participants — O(prefix + seg_len) instead of O(n).
+
+        Event order is the generic loop's verbatim: same admission ranks,
+        same park-on-first-busy-resource semantics, same (time, seq)
+        completion ties. The fold is sound because instances of one
+        position share resources and durations and their admission ranks
+        are segment-major (rank of instance s+1 = rank of instance s +
+        seg_len, proven at lowering), so instance s+1 can never be admitted
+        before instance s: materializing it only when instance s starts
+        preserves the admitted set — and hence the whole schedule — at
+        every event (bit-identity asserted in tests/test_engine_equiv.py).
+        """
+        idx = self.idx
+        seg = ctl.seg
+        P, T, q = seg.prefix, seg.seg_len, seg.q
+        n = ctl.n
+        total_blocks = ctl.total_blocks
+        rank = ctl.rank
+        res_ids = ctl.res_ids
+        durs = ctl.durs
+        nbytes = ctl.nbytes
+        dsts = ctl.dst
+        blks = ctl.blks
+        grps = ctl.grps
+        children = ctl.children
+        dep_kind, dep_src = ctl.fold_layout()
+        spans = ctl.spans if ctl.all_fresh else None
+
+        # template positions that wake when an instance of position t (or
+        # the prefix task feeding position t's first instance) completes
+        intra_children: List[List[int]] = [[] for _ in range(T)]
+        prev_children: List[List[int]] = [[] for _ in range(T)]
+        for t in range(T):
+            if dep_kind[t] == 1:
+                intra_children[dep_src[t]].append(t)
+            elif dep_kind[t] == 2:
+                prev_children[dep_src[t]].append(t)
+
+        # prefix tasks: individual state (codes as in the generic loop)
+        pstate = bytearray(P)
+        dep_left = list(ctl.dep_n[:P])
+        pdone = bytearray(P)
+        # template positions: cur[t] = the live (not yet started) instance,
+        # done_cnt[t] = completed instances (completions of one position are
+        # in segment order: equal durations + segment-major admission);
+        # tstate[t] codes the live instance: 0 waiting, 1 ready, 2 parked
+        cur = [0] * T
+        done_cnt = [0] * T
+        tstate = bytearray(T)
+
+        def dep_ok(t: int, s: int) -> bool:
+            k = dep_kind[t]
+            if k == 0:
+                return True
+            if k == 1:
+                return done_cnt[dep_src[t]] >= s + 1
+            if s == 0:
+                return pdone[P + dep_src[t] - T] == 1
+            return done_cnt[dep_src[t]] >= s
+
+        ready: List[Tuple[int, int]] = []
+        for i in range(P):
+            if not dep_left[i]:
+                pstate[i] = 1
+                ready.append((rank[i], i))
+        for t in range(T):
+            if dep_ok(t, 0):
+                tstate[t] = 1
+                ready.append((rank[P + t], P + t))
+        heapq.heapify(ready)
+
+        caps = idx.caps
+        busy = [0] * idx.num_resources()
+        res_wait: List[Optional[List[int]]] = [None] * len(busy)
+        nn = self.topo.num_nodes
+        root = self.root
+        remaining = [total_blocks] * nn
+        remaining[root] = 0
+        seen: List[Optional[bytearray]] = [None] * nn
+        node_finish: Dict[int, float] = {root: 0.0}
+        deliveries: List[Tuple[float, float]] = []
+        group_last: Dict[int, float] = {}
+        events: List[Tuple[float, int, int]] = []
+        seq = 0
+        now = 0.0
+        started = 0
+        push = heapq.heappush
+        pop = heapq.heappop
+        deliver = deliveries.append
+
+        def live(i: int) -> int:
+            """Decode a heap/wait entry: -1 for a stale one, else the
+            template position (or the prefix index, < P, as-is)."""
+            if i < P:
+                return i
+            t = (i - P) % T
+            return t if cur[t] * T + t == i - P else -1
+
+        def admit() -> None:
+            nonlocal seq, started
+            while ready:
+                _, i = pop(ready)
+                if i < P:
+                    if pstate[i] != 1:
+                        continue
+                    rs = res_ids[i]
+                else:
+                    t = live(i)
+                    if t < 0 or tstate[t] != 1:
+                        continue
+                    rs = res_ids[P + t]   # every instance shares them
+                blocked = -1
+                for r in rs:
+                    if busy[r] >= caps[r]:
+                        blocked = r
+                        break
+                if blocked >= 0:
+                    # the contended-path contract (see _run_generic): park
+                    # on the first busy resource only
+                    if i < P:
+                        pstate[i] = 2
+                    else:
+                        tstate[t] = 2
+                    w = res_wait[blocked]
+                    if w is None:
+                        res_wait[blocked] = [i]
+                    else:
+                        w.append(i)
+                    continue
+                for r in rs:
+                    busy[r] += 1
+                push(events, (now + durs[i], seq, i))
+                seq += 1
+                started += 1
+                if i < P:
+                    pstate[i] = 3
+                else:
+                    # the position's next instance materializes now: it
+                    # ranks seg_len above this one, so the heap still pops
+                    # this admission pass in exact global rank order
+                    s = cur[t] = cur[t] + 1
+                    if s < q:
+                        if dep_ok(t, s):
+                            tstate[t] = 1
+                            push(ready, (rank[i + T], i + T))
+                        else:
+                            tstate[t] = 0
+                    else:
+                        tstate[t] = 0
+
+        admit()
+        completed = 0
+        while events:
+            now, _, i = pop(events)
+            completed += 1
+            rs = res_ids[i] if i < P else res_ids[P + (i - P) % T]
+            for r in rs:
+                busy[r] -= 1
+            d = dsts[i]
+            rem = remaining[d]
+            if rem > 0:
+                if spans is not None:
+                    rem -= spans[i]
+                    remaining[d] = rem
+                    if rem <= 0 and d not in node_finish:
+                        node_finish[d] = now
+                else:
+                    sb = seen[d]
+                    if sb is None:
+                        sb = seen[d] = bytearray(total_blocks)
+                    fresh = 0
+                    for b in range(*blks[i]):
+                        if not sb[b]:
+                            sb[b] = 1
+                            fresh += 1
+                    if fresh:
+                        rem -= fresh
+                        remaining[d] = rem
+                        if rem <= 0 and d not in node_finish:
+                            node_finish[d] = now
+            deliver((now, nbytes[i]))
+            g = grps[i]
+            if g is not None:
+                prev = group_last.get(g)
+                if prev is None or now > prev:
+                    group_last[g] = now
+            if i < P:
+                pstate[i] = 4
+                pdone[i] = 1
+                ch = children[i]
+                if ch is not None:
+                    for j in ch:
+                        if j < P:
+                            dl = dep_left[j] - 1
+                            dep_left[j] = dl
+                            if not dl and pstate[j] == 0:
+                                pstate[j] = 1
+                                push(ready, (rank[j], j))
+                        else:
+                            # the first instance of a position whose
+                            # prev-segment chain starts at this prefix task
+                            t = j - P
+                            if cur[t] == 0 and tstate[t] == 0:
+                                tstate[t] = 1
+                                push(ready, (rank[j], j))
+            else:
+                tc = (i - P) % T
+                done_cnt[tc] += 1
+                for t in intra_children[tc]:
+                    s = cur[t]
+                    if s < q and tstate[t] == 0 and dep_ok(t, s):
+                        tstate[t] = 1
+                        push(ready, (rank[P + s * T + t], P + s * T + t))
+                for t in prev_children[tc]:
+                    s = cur[t]
+                    if s < q and tstate[t] == 0 and dep_ok(t, s):
+                        tstate[t] = 1
+                        push(ready, (rank[P + s * T + t], P + s * T + t))
+            for r in rs:
+                w = res_wait[r]
+                if w is not None:
+                    res_wait[r] = None
+                    for j in w:
+                        if j < P:
+                            if pstate[j] == 2:
+                                pstate[j] = 1
+                                push(ready, (rank[j], j))
+                        else:
+                            t = live(j)
+                            if t >= 0 and tstate[t] == 2:
+                                tstate[t] = 1
+                                push(ready, (rank[j], j))
+            admit()
+
+        assert completed == n, \
+            f"{n - completed} tasks never ran — dependency cycle"
+        missing = [v for v in range(nn) if remaining[v] > 0]
+        assert not missing, f"nodes {missing[:5]} never got the full message"
+        gf = [group_last[g] for g in sorted(group_last)] if group_last else []
+        return SimResult(finish_time=max(node_finish.values()),
+                         node_finish=node_finish, deliveries=deliveries,
+                         group_finish=gf, started=started,
+                         completed=completed)
+
     # -- fault-aware runs ----------------------------------------------------
 
     def _run_faulty(self, tasks: Sequence[SendTask],
@@ -516,10 +784,10 @@ class CompiledSim:
 
         Identical admission order (ready heap keyed ``(priority, index)``),
         identical control-event handling (shared ``repro.core.faults`` heap
-        and ``plan_repair``), first-busy-resource blocking only (the PR-4
-        argument: while the first busy resource stays busy, every reference
-        wake on the other busy resources' frees — completions *and* in-flight
-        aborts — fails admission, so the admitted sequence is unchanged).
+        and ``plan_repair``), first-busy-resource blocking only (the
+        contended-path contract stated in ``_run_generic``; fault-driven
+        in-flight aborts wake blocked tasks the same way completions do,
+        and fail admission the same way while the parked resource is busy).
         Folding, batch admission and countdown coverage stay off: fault
         events invalidate the static preconditions they were proven under.
         Bit-identity with the oracle is asserted in tests/test_faults.py."""
@@ -1498,12 +1766,16 @@ class CompiledSim:
         template is kept live in the ready/blocked structures; the rest stay
         dormant (dep-free instances behind a successor counter, dep-ready
         ones in a per-template heap) and are activated exactly at the
-        admission pass where the live predecessor starts. The reference
-        instead wakes and re-blocks whole m-instance backlogs on every
-        resource free — quadratic thrash on long jittery runs — but both
-        produce the identical admission sequence: a dormant instance can
-        never be admitted while a lower-group instance of the same template
-        is blocked on the same resources.
+        admission pass where the live predecessor starts. Without the fold
+        the engine would wake and re-block whole m-instance backlogs on
+        every resource free; with it, wait queues hold at most one live
+        instance per template task — which is also why this loop still
+        parks blocked instances on *every* busy resource like the
+        reference, instead of the first-busy-only contract of
+        ``_run_generic``: the queues it re-blocks are O(T), so there is
+        nothing to save. Either way the admission sequence is identical: a
+        dormant instance can never be admitted while a lower-group instance
+        of the same template is blocked on the same resources.
 
         With ``scan``, a boundary signature is captured at every group
         boundary: the dense resource-occupancy vector, the in-flight task

@@ -64,7 +64,11 @@ from repro.core.topology import Topology
 #       ``CompiledTaskList`` grew route-override columns; the hierarchical
 #       candidate rule became local-index-preserving (new fingerprints for
 #       fat-tree/dragonfly fabrics)
-SCHEMA_VERSION = 4
+#   5 — extended segment folds: ``SegmentInfo`` gained the ``pure`` field
+#       and ``foldable`` now covers prefix/prev-segment lists (srda ring
+#       allgather), so pickled ``CompiledTaskList.seg`` values from older
+#       stores would misclassify under the new fold dispatch
+SCHEMA_VERSION = 5
 
 _MAGIC = "bbs-plan"
 _MAGIC_PACKED = "bbs-plan-pack"

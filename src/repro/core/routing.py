@@ -462,20 +462,30 @@ class SegmentInfo:
     The trailing ``q`` runs of ``seg_len`` tasks each repeat one structural
     pattern (same src/dst/nbytes/block-span per position, dependencies at the
     same relative offsets); ``prefix`` tasks precede them. ``foldable`` marks
-    lists the engine may execute as ``q`` instances of one segment template,
-    exactly like pipeline groups (requires, beyond periodicity: no prefix,
-    intra-segment single dependencies, segment-major admission ranks,
+    lists the engine may execute through the folded instance core — one live
+    instance per segment-template position plus the prefix tasks as scalar
+    participants. It requires, beyond periodicity: prefix dependencies
+    confined to the prefix, at most one dependency per segment position,
+    dependencies reaching back at most one segment (intra-segment or
+    prev-segment — srda's ring allgather chains each step to the previous
+    one), and segment-major admission ranks
+    (``rank[prefix+T:] == rank[prefix:n-T] + T``, so instance ``s+1`` of a
+    position always ranks after instance ``s``). ``pure`` marks the strict
+    subclass the PR-4 template fold and the occupancy-cycle analytics
+    accept: additionally no prefix, intra-segment dependencies only,
     per-segment group tags, and deliveries that are globally fresh — every
     (node, block) pair delivered at most once, each task carrying >= 1
-    block). ``cover_bad`` lists nodes whose deliveries do not span all blocks
-    (folding is valid only when the broadcast root is the sole such node);
-    ``reason`` names the first failed fold rule for diagnostics.
+    block. ``cover_bad`` lists nodes whose deliveries do not span all blocks
+    (the pure template fold is valid only when the broadcast root is the
+    sole such node); ``reason`` names the first failed fold rule for
+    diagnostics.
     """
 
     prefix: int
     seg_len: int
     q: int
     foldable: bool
+    pure: bool = False
     cover_bad: FrozenSet[int] = frozenset()
     reason: str = ""
 
@@ -500,8 +510,11 @@ class CompiledTaskList:
       * ``blks``/``grps``/``total_blocks`` — block coverage and pipeline
         group tags;
       * ``seg`` — segment periodicity (``SegmentInfo``) detected from the
-        leading priority component; fold-eligible lists execute through the
-        same folded template core as pipeline groups.
+        leading priority component; fold-eligible lists execute through a
+        folded instance core — the pure subclass (no prefix, intra-segment
+        deps, fresh deliveries) through the same template core as pipeline
+        groups, the extended class (prefix region, prev-segment dependency
+        chains — srda's ring allgather) through the folded-list loop.
 
     Dense resource ids are *process-local* (routed non-candidate pairs intern
     in first-use order), so pickling strips them (``__getstate__``) and
@@ -736,45 +749,52 @@ class CompiledTaskList:
 
     def _fold_rules(self, prefix: int, T: int, q: int) -> SegmentInfo:
         """Apply the fold eligibility rules to a detected segmentation (see
-        ``SegmentInfo``); every rule guards an invariant the folded template
-        core relies on for bit-identical replay."""
+        ``SegmentInfo``); every rule guards an invariant a folded execution
+        path relies on for bit-identical replay. The extended rules admit a
+        prefix region and prev-segment dependency chains (the folded-list
+        loop); the ``pure`` subclass keeps the stricter PR-4 template-fold
+        contract that the occupancy-cycle analytics require."""
 
         def no(reason: str) -> SegmentInfo:
             return SegmentInfo(prefix=prefix, seg_len=T, q=q, foldable=False,
                                reason=reason)
 
-        if prefix:
-            return no("prefix tasks precede the periodic segments")
-        for i in range(T):
-            ds = self.deps[i]
+        # -- extended rules: what the folded-list loop relies on ------------
+        for i in range(prefix):
+            if any(not 0 <= d < prefix for d in self.deps[i]):
+                return no("prefix tasks depend on segment tasks")
+        for t in range(prefix, prefix + T):
+            ds = self.deps[t]
             if len(ds) > 1:
-                return no("multi-dependency tasks")
-            if ds and not 0 <= ds[0] < T:
-                return no("cross-segment dependencies")
+                return no("multi-dependency segment tasks")
+            if ds and ds[0] < prefix - T:
+                return no("dependencies reach back more than one segment")
         rank = np.asarray(self.rank)
-        if not bool((rank[T:] == rank[:-T] + T).all()):
+        if not bool((rank[prefix + T:] == rank[prefix:self.n - T] + T).all()):
             return no("admission ranks are not segment-major")
-        if self.has_groups:
-            grps = np.asarray(self.grps)
-            if not bool((grps == np.arange(self.n) // T).all()):
-                return no("group tags are not the segment index")
-        elif any(g is not None for g in self.grps):
-            return no("mixed group tags")
-        if not self.all_fresh:
-            return no("deliveries are not globally fresh")
-        return SegmentInfo(prefix=0, seg_len=T, q=q, foldable=True,
-                           cover_bad=self.cover_bad)
+
+        # -- pure subclass: the PR-4 template fold + cycle analytics --------
+        pure = (prefix == 0 and self.all_fresh
+                and all(not ds or 0 <= ds[0] < T for ds in self.deps[:T]))
+        if pure:
+            if self.has_groups:
+                grps = np.asarray(self.grps)
+                pure = bool((grps == np.arange(self.n) // T).all())
+            else:
+                pure = not any(g is not None for g in self.grps)
+        return SegmentInfo(prefix=prefix, seg_len=T, q=q, foldable=True,
+                           pure=pure, cover_bad=self.cover_bad)
 
     # -- folded template ------------------------------------------------------
 
     def fold_template(self, ct: CompiledTopology):
-        """The one-segment template of a foldable list, lowered like a
-        pipeline group (``CompiledTemplate``), plus its fixed per-task
+        """The one-segment template of a *pure*-foldable list, lowered like
+        a pipeline group (``CompiledTemplate``), plus its fixed per-task
         durations and byte counts. The engine then executes the list as
         ``seg.q`` template instances — task ``s*T + t`` is template task
         ``t`` of segment ``s`` — through the identical folded event core
         that runs pipelines."""
-        assert self.seg is not None and self.seg.foldable
+        assert self.seg is not None and self.seg.pure
         tpl = self._tpl
         if tpl is None:
             from repro.core.schedule import FlatTasks
@@ -786,3 +806,33 @@ class CompiledTaskList:
             tpl = self._tpl = ct.lower_template(ft)
         return tpl, self.durs[:self.seg.seg_len], \
             self.nbytes[:self.seg.seg_len]
+
+    def fold_layout(self) -> Tuple[List[int], List[int]]:
+        """Per-position dependency classification of a foldable list, for
+        the folded-list executors (``CompiledSim._run_folded_list`` and the
+        kernel engine).
+
+        Returns ``(dep_kind, dep_src)`` over the ``seg_len`` template
+        positions. ``dep_kind[t]`` is 0 (no dependency), 1 (intra-segment:
+        instance ``(s, t)`` depends on ``(s, dep_src[t])``) or 2
+        (prev-segment: instance ``(s, t)`` depends on ``(s-1, dep_src[t])``;
+        for ``s == 0`` the dependency is the individual prefix task
+        ``prefix + dep_src[t] - seg_len``). ``dep_src`` holds template
+        positions in ``[0, seg_len)``."""
+        seg = self.seg
+        assert seg is not None and seg.foldable
+        P, T = seg.prefix, seg.seg_len
+        dep_kind: List[int] = []
+        dep_src: List[int] = []
+        for t in range(T):
+            ds = self.deps[P + t]
+            if not ds:
+                dep_kind.append(0)
+                dep_src.append(0)
+            elif ds[0] >= P:
+                dep_kind.append(1)
+                dep_src.append(ds[0] - P)
+            else:
+                dep_kind.append(2)
+                dep_src.append(ds[0] - P + T)
+        return dep_kind, dep_src

@@ -54,8 +54,11 @@ UNSET = _Unset()
 class SimConfig:
     """Simulation options shared by every ``simulate_*`` entrypoint.
 
-    ``engine`` selects the execution engine (``"fast"`` — the flat-array
-    engine, the default everywhere — or ``"reference"``, the oracle).
+    ``engine`` selects the execution engine: ``"fast"`` — the flat-array
+    engine, the default everywhere; ``"kernel"`` — the jax-jitted round
+    core over the lowered arrays (``repro.core.kernelsim``; falls back to
+    the numpy path for faults, pipelines and jax-less environments);
+    ``"reference"`` — the oracle.
     ``faults`` is an optional ``repro.core.faults.FaultSchedule``; a
     non-empty schedule routes the run through the engine's fault loop.
     ``cycle_detect`` / ``cycle_scan_groups`` / ``cycle_hint`` control the

@@ -134,12 +134,18 @@ _WAITING, _READY, _BLOCKED, _RUNNING, _DONE = range(5)
 
 def make_engine(topo: Topology, cm: ConflictModel, root: int,
                 engine: str = DEFAULT_ENGINE):
-    """Simulator factory: the reference oracle or the flat-array engine."""
+    """Simulator factory: the reference oracle, the flat-array engine, or
+    the jit-kernelized engine (``"kernel"`` — jax round core over the
+    lowered arrays, numpy fallback when jax is unavailable; see
+    ``repro.core.kernelsim``)."""
     if engine == "reference":
         return EventSimulator(topo, cm, root)
     if engine == "fast":
         from repro.core.fastsim import CompiledSim
         return CompiledSim(topo, cm, root)
+    if engine == "kernel":
+        from repro.core.kernelsim import KernelSim
+        return KernelSim(topo, cm, root)
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -684,7 +690,10 @@ def simulate_pipeline(topo: Topology, cm: ConflictModel, pipe: Pipeline,
         d_meas = gf[-1] - gf[-2] if len(gf) >= 2 else 0.0
         return res.finish_time, res, d_meas
 
-    if engine == "fast":
+    if engine in ("fast", "kernel"):
+        # the kernel engine has no pipeline path of its own: pipelines run
+        # through the cycle-analytic machinery, which is (and stays) the
+        # numpy engine — "kernel" here means the fast path, bit-identical
         from repro.core.fastsim import CompiledSim
         run = CompiledSim(topo, cm, root).run_pipeline(
             pipe, packet_bytes, num_groups, max_sim_groups=max_sim_groups,

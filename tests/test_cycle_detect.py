@@ -182,10 +182,11 @@ def test_task_list_cycle_fires_and_is_exact_on_chain_baseline():
 
 
 def test_task_list_analytics_fall_back_to_full_sim():
-    """Honest fallback matrix for ``run_task_list``: a non-foldable list
-    (srda ring-allgather — segmented but behind a scatter prefix) and a
-    foldable list whose requested budget covers it must both return the
-    complete simulation, bit-identical to the reference, with no cycle."""
+    """Honest fallback matrix for ``run_task_list``: an extended-foldable
+    list (srda ring-allgather — segmented behind a scatter prefix, so not
+    analytics-eligible) and a pure-foldable list whose requested budget
+    covers it must both return the complete simulation, bit-identical to
+    the reference, with no cycle."""
     from repro.core.baselines import BASELINES, chain_pipeline_tasks
 
     topo = T.mesh2d(4, 6)   # 24 nodes: srda takes the ring-allgather path
@@ -193,9 +194,12 @@ def test_task_list_analytics_fall_back_to_full_sim():
     tasks = BASELINES["srda"](topo, 0, 2.4e6)
     sim = CompiledSim(topo, cm, 0)
     ctl = sim.lower(tasks)
-    assert ctl.seg is not None and not ctl.seg.foldable
+    assert ctl.seg is not None and ctl.seg.foldable and not ctl.seg.pure
     run = sim.run_task_list(lowered=ctl, max_sim_segments=6)
     assert run.cycle is None
+    # the prefix-folded list simulates completely — the segment template
+    # alone cannot replay it, so the analytics must not have fired
+    assert run.sim_segments == ctl.seg.q
     ref = EventSimulator(topo, cm, 0).run(tasks,
                                           total_blocks=ctl.total_blocks)
     assert run.res.finish_time == ref.finish_time

@@ -225,5 +225,35 @@ def test_baseline_lowered_matrix(algo, name, mode, topos):
     assert lower_baseline(topo, cm, algo, 0, 3.2e6) is ctl
     again = simulate_baseline(topo, cm, algo, 0, 3.2e6, engine="fast")
     assert again.deliveries == ref.deliveries
-    if algo == "pipeline":   # the chain family folds; the rest stay generic
-        assert ctl.seg is not None and ctl.seg.foldable
+    if algo == "pipeline":   # the chain family folds pure (analytics-ready);
+        assert ctl.seg is not None and ctl.seg.pure
+    # srda on these power-of-two fabrics takes recursive doubling (no
+    # segments); its ring-allgather shape is covered by the non-power-of-two
+    # matrix below
+
+
+@pytest.mark.parametrize("mode", [FULL_DUPLEX, ALL_PORT])
+@pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree"])
+def test_srda_ring_allgather_folds_and_matches(name, mode):
+    """srda on non-power-of-two fabrics takes the scatter + ring-allgather
+    path: a prefix region plus prev-segment dependency chains. The extended
+    fold executes it through the folded-list core — bit-identical to the
+    reference oracle, every field including delivery order."""
+    if name == "mesh2d":
+        topo = T.mesh2d(4, 6)
+    elif name == "dragonfly":
+        topo = T.dragonfly(24)
+    else:
+        topo = T.fat_tree(24, radix=8)
+    cm = ConflictModel(topo, mode)
+    from repro.core.baselines import lower_baseline
+    ctl = lower_baseline(topo, cm, "srda", 0, 2.4e6)
+    assert ctl.seg is not None and ctl.seg.foldable and not ctl.seg.pure
+    assert ctl.seg.prefix > 0
+    ref = simulate_baseline(topo, cm, "srda", 0, 2.4e6, engine="reference")
+    fast = simulate_baseline(topo, cm, "srda", 0, 2.4e6, engine="fast")
+    assert fast.finish_time == ref.finish_time
+    assert fast.node_finish == ref.node_finish
+    assert fast.deliveries == ref.deliveries
+    assert fast.group_finish == ref.group_finish
+    assert (fast.started, fast.completed) == (ref.started, ref.completed)

@@ -274,8 +274,9 @@ def test_task_list_lowering_matches_reference_setup():
 
 
 def test_segment_detection_chain_folds():
-    """The chain-pipeline baseline is the canonical foldable list: no
-    prefix, intra-segment deps, segment-major ranks, per-segment groups."""
+    """The chain-pipeline baseline is the canonical *pure* foldable list:
+    no prefix, intra-segment deps, segment-major ranks, per-segment
+    groups — template-fold and analytics eligible."""
     from repro.core.baselines import chain_pipeline_tasks
 
     topo = T.mesh2d(4, 8)
@@ -284,7 +285,7 @@ def test_segment_detection_chain_folds():
     tasks = chain_pipeline_tasks(topo, 0, 64e3 * q, packets=q)
     ctl = cm.compiled().lower_tasks(tasks)
     seg = ctl.seg
-    assert seg is not None and seg.foldable
+    assert seg is not None and seg.foldable and seg.pure
     assert seg.prefix == 0 and seg.q == q
     assert seg.seg_len == topo.num_nodes - 1
     assert seg.cover_bad == {0}          # only the root holds nothing new
@@ -293,17 +294,77 @@ def test_segment_detection_chain_folds():
     assert durs == ctl.durs[:seg.seg_len]
 
 
-def test_segment_detection_srda_ring_prefix_not_foldable():
+def test_segment_detection_srda_ring_prefix_folds_extended():
     """srda on a non-power-of-two fabric: the ring-allgather rounds repeat a
-    per-segment pattern, but they sit behind the scatter prefix (and chain
-    across segments), so the detector reports them honestly un-foldable."""
+    per-segment pattern behind the scatter prefix, chained across segments.
+    The extended fold accepts exactly that shape (prefix region +
+    prev-segment dependency chains); it is not *pure* — the segment
+    template alone cannot replay it, so the cycle analytics stay off."""
     topo = T.mesh2d(4, 6)    # 24 nodes
     ctl, tasks, _ = _lowered(topo, FULL_DUPLEX, "srda", 0, 2.4e6)
     seg = ctl.seg
-    assert seg is not None and not seg.foldable
+    assert seg is not None and seg.foldable and not seg.pure
     assert seg.prefix > 0 and seg.q >= 2
     assert seg.seg_len == topo.num_nodes
-    assert "prefix" in seg.reason
+    # every allgather position chains to the previous segment (ring step)
+    dep_kind, dep_src = ctl.fold_layout()
+    assert all(k == 2 for k in dep_kind)
+    assert sorted(dep_src) == list(range(seg.seg_len))
+
+
+def test_fold_rejects_structural_counterexamples():
+    """Extended-fold rule boundaries: periodic broadcasts whose
+    dependencies reach back *two* segments, or whose admission ranks are
+    not segment-major, must reject into the generic lowered loop — and
+    still replay bit-identical to the reference there."""
+    import dataclasses
+
+    from repro.core.baselines import chain_pipeline_tasks
+    from repro.core.fastsim import CompiledSim
+    from repro.core.simulator import EventSimulator
+
+    topo = T.ring(8)
+    cm = ConflictModel(topo, FULL_DUPLEX)
+    q = 6
+    Tseg = topo.num_nodes - 1
+    base = chain_pipeline_tasks(topo, 0, 64e3 * q, packets=q)
+
+    # (a) rewire each packet's head task to chain two packets back: the
+    # first two boundaries disagree (dep-free head, then one-back) so
+    # detection absorbs them into the prefix, and the remaining segments'
+    # dependencies point past the previous segment — honestly un-foldable
+    tasks = []
+    for i, t in enumerate(base):
+        s = i // Tseg
+        if i % Tseg == 0 and s >= 1:
+            t = dataclasses.replace(t, deps=(max(s - 2, 0) * Tseg,))
+        tasks.append(t)
+    ctl = cm.compiled().lower_tasks(tasks)
+    seg = ctl.seg
+    assert seg is not None and not seg.foldable
+    assert "more than one segment" in seg.reason
+    sim = CompiledSim(topo, cm, 0)
+    ref = EventSimulator(topo, cm, 0).run(tasks, total_blocks=q)
+    got = sim.run_lowered(ctl)
+    assert got.deliveries == ref.deliveries
+    assert got.node_finish == ref.node_finish
+    assert got.finish_time == ref.finish_time
+
+    # (b) scramble the leading priority components: segment structure is
+    # intact but ranks interleave across segments, breaking the
+    # instance-order invariant the folded core relies on
+    perm = [5, 3, 4, 1, 2, 0]
+    tasks = [dataclasses.replace(t, priority=(perm[i // Tseg],
+                                              t.priority[1]))
+             for i, t in enumerate(base)]
+    ctl = cm.compiled().lower_tasks(tasks)
+    seg = ctl.seg
+    assert seg is not None and not seg.foldable
+    assert "segment-major" in seg.reason
+    ref = EventSimulator(topo, cm, 0).run(tasks, total_blocks=q)
+    got = sim.run_lowered(ctl)
+    assert got.deliveries == ref.deliveries
+    assert got.node_finish == ref.node_finish
 
 
 def test_segment_detection_rejects_aperiodic_lists():

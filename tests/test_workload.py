@@ -180,6 +180,34 @@ def test_offered_load_sweep_saturates(model):
 
 # -- churn -------------------------------------------------------------------
 
+def test_single_job_churn_bit_identical_to_fault_oracle(model):
+    """A single job at t=0 under churn replays the reference fault oracle
+    bit-for-bit: ``run_jobs``'s per-job fault discipline is a pure refactor
+    of ``EventSimulator``'s ``_run_faulty`` when nothing contends."""
+    from repro.core.simulator import EventSimulator
+
+    t1, _ = model.broadcast_time(0, NBYTES)
+    link = model.topo.links((0, 1))[0]
+    sched = F.FaultSchedule.kill_link(link, time=t1 / 3)
+    # the exact task list the workload job lowers (plan + select + groups)
+    plan = model.plan(0)
+    cand, m = plan.select(NBYTES, top=1)[0]
+    k = len(cand.pipeline.trees)
+    pkts = [NBYTES / m * t.weight for t in cand.pipeline.trees]
+    tasks = pipeline_tasks(cand.pipeline, pkts, m)
+    ref = EventSimulator(model.topo, model.cm, 0).run(
+        tasks, total_blocks=m * k, faults=sched)
+    rep = run_workload(model, [BroadcastJob(0.0, 0, NBYTES, job_id=0)],
+                       faults=sched)
+    job = rep.jobs[0]
+    assert job.finish == ref.finish_time
+    assert rep.started == ref.started
+    assert rep.completed == ref.completed
+    assert rep.faults.events_applied == ref.faults.events_applied
+    assert rep.faults.lost == ref.faults.lost
+    assert rep.faults.incomplete == ref.faults.incomplete
+
+
 def test_workload_under_churn_delivers_and_reports(model):
     t1, _ = model.broadcast_time(0, NBYTES)
     link = model.topo.links((0, 1))[0]
