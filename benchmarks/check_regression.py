@@ -25,6 +25,11 @@ Cells:
                        heaviest offered-load point (simulated time, so the
                        cell is deterministic — any drop is a semantic
                        change in the scheduler loop, not runner noise)
+  device_cycles_per_s  measured pipeline-cycle throughput of the compiled
+                       BBS plan on the emulated 8-device mesh (floor)
+  device_pred_err      Hockney-calibration predicted-vs-measured cycle
+                       time relative error on the same mesh — a ceiling
+                       ({"max": 0.15}, the paper-facing accuracy bound)
 
 A floor value is either a bare number (a minimum, the historical form) or
 ``{"min": x}`` / ``{"max": x}`` — ``max`` turns the cell into a ceiling,
@@ -67,6 +72,10 @@ def extract_cells(records) -> dict:
         name, engine = rec.get("name"), rec.get("engine")
         if name == "kernel_sweep":
             cells["kernel_sweep"] = rec["speedup"]
+            continue
+        if name == "device_collective":
+            cells["device_cycles_per_s"] = rec["cycles_per_s"]
+            cells["device_pred_err"] = rec["pred_err"]
             continue
         if engine != "fast":
             continue

@@ -1,13 +1,19 @@
 """Roofline assembly from dry-run artifacts (§Roofline of EXPERIMENTS.md).
 
-TPU v5e constants: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI
-(4 links/chip on the 2D torus; the collective term charges the serialized
-per-link volume, i.e. per-device collective bytes / link_bw).
+Link bandwidth comes from the measured Hockney calibration artifact when
+one exists (``benchmarks/artifacts/calibration.json``, written by
+``repro.device.calibrate`` — see docs/device.md); otherwise the documented
+TPU v5e datasheet fallbacks apply: 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
 
 All parsed HLO quantities are per-device (post-SPMD shapes), so:
     compute    = flops_dev / PEAK_FLOPS      (== flops_global / (chips*peak))
     memory     = dot_bytes_dev / HBM_BW
-    collective = coll_bytes_dev / LINK_BW
+    collective = coll_bytes_dev / (LINK_BW * links_per_chip)
+The collective term divides by the chip's port count: TPU tori are
+all-port fabrics (every ICI link sends concurrently — the same property
+the BBS schedule saturates), so a well-mapped collective ships its
+per-device volume over all links at once, not serialized through one.
 MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (decode), giving
 the useful-compute ratio (catches remat/redundant compute).
 """
@@ -23,12 +29,44 @@ from repro.configs import ARCHS, get_config, skipped_cells
 from repro.configs.base import SHAPES
 from repro.models import mamba2 as M
 
+# documented datasheet fallbacks (TPU v5e), used when no calibration
+# artifact is present
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
 
 ARTIFACTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "artifacts")
+CALIBRATION_PATH = os.path.join(ARTIFACTS, "calibration.json")
+
+
+def load_calibration(path: Optional[str] = None):
+    """The measured ``CalibratedCost`` artifact, or None to use the
+    datasheet fallbacks. Malformed artifacts raise (a silently-ignored
+    bad calibration would quietly change every roofline number)."""
+    from repro.device.calibrate import CalibratedCost
+    path = path or CALIBRATION_PATH
+    if not os.path.exists(path):
+        return None
+    return CalibratedCost.load(path)
+
+
+def link_bandwidth(cost=None, cls: Optional[str] = None) -> float:
+    """Per-link bandwidth in bytes/s: the calibrated beta when measured,
+    else the LINK_BW fallback."""
+    if cost is None:
+        return LINK_BW
+    if cls is None or cls not in cost.classes:
+        cls = next(iter(cost.classes))
+    return cost.beta(cls)
+
+
+def links_per_chip(mesh: str) -> int:
+    """Concurrent ICI links per chip for a torus mesh name like
+    ``pod16x16`` / ``pod2x16x16``: two per wrap-around axis, one for a
+    size-2 axis (the wrap link is the same cable)."""
+    dims = [int(d) for d in mesh.lstrip("pod").split("x") if d]
+    return max(1, sum(2 if d > 2 else 1 for d in dims if d > 1))
 
 
 def param_count(cfg) -> Dict[str, float]:
@@ -108,12 +146,14 @@ def load_cells(mesh: str = "pod16x16") -> List[Dict]:
     return out
 
 
-def roofline_row(rec: Dict) -> Dict:
+def roofline_row(rec: Dict, cost=None) -> Dict:
     chips = rec["chips"]
     t_compute = rec["flops"] / PEAK_FLOPS
     t_memory = rec["dot_bytes"] / HBM_BW
     coll = sum(rec["collective_bytes"].values())
-    t_coll = coll / LINK_BW
+    # all-port fabric: the per-device collective volume ships over every
+    # ICI link concurrently, so the per-link charge divides by port count
+    t_coll = coll / (link_bandwidth(cost) * links_per_chip(rec["mesh"]))
     terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
     bottleneck = max(terms, key=terms.get)
     mf = model_flops(rec["arch"], rec["shape"])
@@ -132,8 +172,10 @@ def roofline_row(rec: Dict) -> Dict:
                 fits_hbm=rec["memory"]["peak_bytes"] <= 16 * 2 ** 30)
 
 
-def table(mesh: str = "pod16x16") -> List[Dict]:
-    return [roofline_row(r) for r in load_cells(mesh)]
+def table(mesh: str = "pod16x16", calibration: Optional[str] = None,
+          ) -> List[Dict]:
+    cost = load_calibration(calibration)
+    return [roofline_row(r, cost) for r in load_cells(mesh)]
 
 
 def render(rows: List[Dict]) -> str:

@@ -28,7 +28,8 @@ import time
 
 ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 
-ALGOS = ("bbs", "binomial", "pipeline", "srda", "glf", "bine", "mpi_bcast")
+ALGOS = ("bbs", "binomial", "pipeline", "srda", "glf", "bine", "bine_tree",
+         "mpi_bcast")
 
 
 _STORE = None

@@ -17,6 +17,7 @@ through::
     t, info = model.broadcast_time(root=0, nbytes=16e6)
     res = model.simulate_baseline("binomial", root=0, nbytes=16e6)
     report = model.workload(jobs)          # concurrent multi-root load
+    ex = model.executable(root=0, nbytes=1 << 16)   # device execution
 
 Simulation options ride a single ``config=SimConfig(...)`` object
 (``repro.core.simconfig``) rather than per-function keyword sprawl; the
@@ -123,6 +124,24 @@ class CompiledModel:
         from repro.core.baselines import simulate_baseline
         return simulate_baseline(self.topo, self.cm, name, root, nbytes,
                                  store=store, config=config)
+
+    # -- device execution -----------------------------------------------------
+
+    def executable(self, root: int, nbytes: float, *, algo: str = "bbs",
+                   config: Optional[SimConfig] = None):
+        """Compile ``(root, nbytes)`` for device execution — an
+        ``repro.device.ExecutablePlan`` with static ppermute tables, a
+        donated-buffer jitted runner, and calibration hooks.
+
+        ``algo="bbs"`` executes the best device-executable candidate of
+        ``plan(root)`` (PlanServer-relabeled plans, pinned route overrides
+        included, flow through unchanged); a baseline name (``"binomial"``,
+        ``"bine_tree"``, ...) lowers that baseline's whole-message tree
+        through the same ``build_pipeline`` -> ``DeviceSchedule`` path."""
+        from repro.device import build_executable
+        plan = self.plan(root) if algo == "bbs" else None
+        return build_executable(self.topo, self.cm, root, nbytes,
+                                algo=algo, plan=plan, config=config)
 
     # -- concurrent workloads -------------------------------------------------
 

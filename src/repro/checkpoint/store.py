@@ -30,7 +30,8 @@ ARRAYS = "arrays.npz"
 
 
 def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # tree_util spelling: jax.tree.flatten_with_path only exists on jax>=0.5
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     items = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

@@ -1,9 +1,16 @@
-"""Executable collectives: BBS pipelines as jax.lax.ppermute programs."""
+"""Deprecated package — the device executor lives in ``repro.device``.
 
-from repro.collectives.bbs_collective import (DeviceSchedule, bbs_broadcast,
+Old imports keep working through :mod:`repro.collectives.bbs_collective`,
+which forwards to the new implementation with a once-per-process
+``DeprecationWarning``.
+"""
+
+from repro.collectives.bbs_collective import (DeviceSchedule,
+                                              NotDeviceExecutable,
+                                              bbs_broadcast,
                                               binomial_broadcast,
                                               chain_broadcast,
                                               make_device_schedule)
 
-__all__ = ["DeviceSchedule", "bbs_broadcast", "binomial_broadcast",
-           "chain_broadcast", "make_device_schedule"]
+__all__ = ["DeviceSchedule", "NotDeviceExecutable", "bbs_broadcast",
+           "binomial_broadcast", "chain_broadcast", "make_device_schedule"]

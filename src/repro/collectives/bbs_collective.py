@@ -1,261 +1,68 @@
-"""BBS pipelines executed on a real device mesh with jax.lax.ppermute.
+"""Deprecated location — the device executor moved to ``repro.device``.
 
-The offline plan (repro.core.bbs) gives a cyclic pipeline: d conflict-free
-rounds per cycle, one packet group (K packets, one per tree) shipped per
-cycle. Each round is a matching over devices => exactly one XLA
-``collective-permute`` per round. The message lives in a per-device buffer of
-``m*K`` packets; a static schedule table says which packet index every device
-sends/receives each round, shifted by ``cycle * K`` as the pipeline advances
-(computed from per-node arrival offsets, so causality is guaranteed by
-construction — a device only ever forwards packets it already holds).
+This module was the original home of the ppermute executor. PR "sim-to-
+silicon" split it into a real package (``repro.device.schedule`` /
+``repro.device.runner``) with relay-chain routing, pallas round steps and
+calibration; the canonical entry point is now
+``repro.api.compile(topo).executable(root, nbytes)``.
 
-The cycle loop is a ``lax.scan`` (compile size independent of message size);
-the d rounds within a cycle are unrolled (d is small: 1-6 for the BBS
-families). This is the TPU-native rendering of the paper's algorithm: every
-ICI link carries a packet every round — balanced saturation.
+Importing the old names keeps working: each call forwards to the new
+implementation after a once-per-process ``DeprecationWarning`` (same
+discipline as the ``SimConfig`` legacy-kwarg shim —
+``repro.core.simconfig._warn_legacy``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from repro.device.schedule import (DeviceSchedule, NotDeviceExecutable,
+                                   _NOSEND, make_device_schedule as
+                                   _make_device_schedule)
+from repro.device.runner import (bbs_broadcast as _bbs_broadcast,
+                                 binomial_broadcast as _binomial_broadcast,
+                                 chain_broadcast as _chain_broadcast)
 
-from repro.core.routing import CompiledTopology
-from repro.core.schedule import Pipeline
+__all__ = ["DeviceSchedule", "NotDeviceExecutable", "bbs_broadcast",
+           "binomial_broadcast", "chain_broadcast", "make_device_schedule"]
 
-
-@dataclasses.dataclass
-class DeviceSchedule:
-    """Static per-round ppermute tables for one BBS pipeline.
-
-    For round r:
-      perms[r]          : list of (src, dst) device pairs (a matching)
-      send_rel[r][dev]  : relative packet index sent by dev (k - K*arr) or big
-                          negative when dev is not a sender this round
-      recv_rel[r][dev]  : relative packet index received, same convention.
-    Packet index at cycle c = c*K + rel; entries outside [0, m*K) are masked.
-    """
-
-    num_devices: int
-    K: int
-    d: int
-    max_arrival: int
-    perms: List[List[Tuple[int, int]]]
-    send_rel: np.ndarray        # (d, num_devices) int32
-    recv_rel: np.ndarray        # (d, num_devices) int32
-    root: int
-
-    def num_cycles(self, num_groups: int) -> int:
-        return num_groups + self.max_arrival
+_warned = False
 
 
-_NOSEND = -(10 ** 6)
+def _warn_moved(name: str) -> None:
+    """Once-per-process deprecation warning for the old import location."""
+    global _warned
+    if _warned:
+        return
+    _warned = True
+    warnings.warn(
+        f"repro.collectives.{name} is deprecated; use repro.device (or "
+        f"repro.api.compile(topo).executable(root, nbytes)) instead "
+        f"(this warning is emitted once per process)",
+        DeprecationWarning, stacklevel=3)
 
 
-def make_device_schedule(pipe: Pipeline, num_devices: int,
-                         compiled: Optional[CompiledTopology] = None,
-                         ) -> DeviceSchedule:
-    """Compile a Pipeline into static ppermute tables.
-
-    arrival(v, k) = cycle (0-based) at which v receives tree k's group-0
-    packet: arr(child) = arr(parent) + (edge round <= parent's in-round).
-    Arrivals are computed from the pipeline's compiled steady-state template
-    (``Pipeline.flat_tasks()`` — the same artifact the fast engine replays
-    and the PlanStore persists) in one depth-ordered pass: a task's sender
-    received its packet at a strictly smaller tree depth, so every parent
-    arrival is resolved before its children (no recursion, chain pipelines of
-    any length included).
-
-    With ``compiled`` (the fabric's ``CompiledTopology``), every scheduled
-    edge is checked to be a single physical hop — ppermute moves one value
-    per (src, dst) pair, so a multi-hop virtual edge would silently model a
-    different network than the simulator charged for.
-    """
-    K = len(pipe.trees)
-    root = pipe.trees[0].root
-    ft = pipe.flat_tasks()
-
-    if compiled is not None:
-        for u, v in zip(ft.src, ft.dst):
-            assert compiled.hops(u, v) == 1, \
-                f"pipeline edge ({u}, {v}) is not a physical link " \
-                f"(hops={compiled.hops(u, v)}); ppermute cannot route it"
-
-    arr: Dict[Tuple[int, int], int] = {}       # (tree, node) -> arrival cycle
-    in_round: Dict[Tuple[int, int], int] = {}  # (tree, node) -> round received
-    for k in range(K):
-        arr[(k, root)] = 0
-        in_round[(k, root)] = -1               # root holds packets pre-round-0
-    for i in sorted(range(len(ft)), key=lambda i: ft.depth[i]):
-        k, u, v, r_e = ft.tree[i], ft.src[i], ft.dst[i], ft.round_ix[i]
-        bump = 1 if r_e <= in_round[(k, u)] else 0
-        arr[(k, v)] = arr[(k, u)] + bump
-        in_round[(k, v)] = r_e
-
-    # split every pipeline round into matchings: ppermute ships one value per
-    # device, so an all-port round (several sends per chip) becomes several
-    # back-to-back collective-permutes (XLA overlaps independent permutes on
-    # disjoint links)
-    sub_rounds: List[List] = []
-    for rnd in pipe.rounds:
-        remaining = list(rnd)
-        while remaining:
-            senders, receivers, take, rest = set(), set(), [], []
-            for task in remaining:
-                u, v = task.edge
-                if u in senders or v in receivers:
-                    rest.append(task)
-                else:
-                    senders.add(u)
-                    receivers.add(v)
-                    take.append(task)
-            sub_rounds.append(take)
-            remaining = rest
-
-    d_exec = len(sub_rounds)
-    perms: List[List[Tuple[int, int]]] = [[] for _ in range(d_exec)]
-    send_rel = np.full((d_exec, num_devices), _NOSEND, dtype=np.int64)
-    recv_rel = np.full((d_exec, num_devices), _NOSEND, dtype=np.int64)
-    for r, rnd in enumerate(sub_rounds):
-        for task in rnd:
-            u, v = task.edge
-            k = task.tree
-            rel = k - K * arr[(k, v)]
-            perms[r].append((int(u), int(v)))
-            send_rel[r][u] = rel
-            recv_rel[r][v] = rel
-    max_arrival = max(arr.values())
-    return DeviceSchedule(num_devices=num_devices, K=K, d=d_exec,
-                          max_arrival=max_arrival, perms=perms,
-                          send_rel=send_rel, recv_rel=recv_rel, root=root)
+def reset_moved_warning() -> None:
+    """Re-arm the once-per-process warning (test helper)."""
+    global _warned
+    _warned = False
 
 
-def _pad_packets(x: jax.Array, num_packets: int) -> Tuple[jax.Array, int]:
-    flat = x.reshape(-1)
-    plen = -(-flat.size // num_packets)
-    pad = plen * num_packets - flat.size
-    flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(num_packets, plen), plen
+def make_device_schedule(*args, **kwargs):
+    _warn_moved("make_device_schedule")
+    return _make_device_schedule(*args, **kwargs)
 
 
-def bbs_broadcast(x: jax.Array, mesh: Mesh, axis: str, sched: DeviceSchedule,
-                  num_groups: int) -> jax.Array:
-    """Broadcast `x` from the schedule's root device to every device along
-    `axis`. Returns the per-device copies stacked on a leading axis (callers
-    that need the replicated value take [i] on their own shard).
-
-    The input is only read on the root device; other devices' values are
-    ignored (zeroed before the pipeline runs).
-    """
-    n = mesh.shape[axis]
-    assert n == sched.num_devices
-    m = num_groups
-    K = sched.K
-    packets, plen = _pad_packets(x, m * K)
-    total = m * K
-    send_rel = jnp.asarray(sched.send_rel)
-    recv_rel = jnp.asarray(sched.recv_rel)
-    perms = sched.perms
-    num_cycles = sched.num_cycles(m)
-
-    def body(buf_x):
-        idx = jax.lax.axis_index(axis)
-        buf = jnp.where(idx == sched.root, buf_x, jnp.zeros_like(buf_x))
-
-        def cycle(buf, c):
-            for r in range(sched.d):
-                s_rel = send_rel[r, idx]
-                r_rel = recv_rel[r, idx]
-                s_idx = c * K + s_rel
-                r_idx = c * K + r_rel
-                s_ok = (s_rel != _NOSEND) & (s_idx >= 0) & (s_idx < total)
-                r_ok = (r_rel != _NOSEND) & (r_idx >= 0) & (r_idx < total)
-                val = jax.lax.dynamic_index_in_dim(
-                    buf, jnp.clip(s_idx, 0, total - 1), keepdims=False)
-                val = jnp.where(s_ok, val, 0)
-                rec = jax.lax.ppermute(val, axis, perms[r])
-                safe = jnp.clip(r_idx, 0, total - 1)
-                cur = jax.lax.dynamic_index_in_dim(buf, safe, keepdims=False)
-                new = jnp.where(r_ok, rec, cur)
-                buf = jax.lax.dynamic_update_index_in_dim(buf, new, safe, 0)
-            return buf, ()
-
-        buf, _ = jax.lax.scan(cycle, buf, jnp.arange(num_cycles))
-        return buf[None]   # leading device axis chunk of size 1
-
-    out = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(axis),
-                        check_vma=False)(packets)
-    return out.reshape(n, total * plen)[:, :x.size].reshape((n,) + x.shape)
+def bbs_broadcast(*args, **kwargs):
+    _warn_moved("bbs_broadcast")
+    return _bbs_broadcast(*args, **kwargs)
 
 
-def binomial_broadcast(x: jax.Array, mesh: Mesh, axis: str,
-                       root: int = 0) -> jax.Array:
-    """Whole-message binomial-tree broadcast: log2(n) ppermute rounds.
-    The baseline the paper compares against; same stacked-output convention."""
-    n = mesh.shape[axis]
-    steps = max(1, (n - 1).bit_length())
-
-    def body(xx):
-        idx = jax.lax.axis_index(axis)
-        vrank = (idx - root) % n
-        buf = jnp.where(idx == root, xx, jnp.zeros_like(xx))
-        have = (vrank == 0)
-        for s in reversed(range(steps)):
-            stride = 1 << s
-            pairs = []
-            for r in range(0, n, 2 * stride):
-                if r + stride < n:
-                    pairs.append((int((root + r) % n),
-                                  int((root + r + stride) % n)))
-            rec = jax.lax.ppermute(jnp.where(have, buf, jnp.zeros_like(buf)),
-                                   axis, pairs)
-            is_dst = (vrank % (2 * stride) == stride)
-            buf = jnp.where(is_dst, rec, buf)
-            have = have | is_dst
-        return buf[None]
-
-    out = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(axis),
-                        check_vma=False)(x)
-    return out
+def binomial_broadcast(*args, **kwargs):
+    _warn_moved("binomial_broadcast")
+    return _binomial_broadcast(*args, **kwargs)
 
 
-def chain_broadcast(x: jax.Array, mesh: Mesh, axis: str, root: int = 0,
-                    num_packets: int = 8) -> jax.Array:
-    """Pipelined ring/chain broadcast: packets stream rank->rank+1 (the
-    MPICH 'pipeline' baseline), m + n - 2 ppermute rounds."""
-    n = mesh.shape[axis]
-    m = num_packets
-    packets, plen = _pad_packets(x, m)
-    pairs = [(int((root + i) % n), int((root + i + 1) % n))
-             for i in range(n - 1)]
-
-    def body(pk):
-        idx = jax.lax.axis_index(axis)
-        vrank = (idx - root) % n
-        buf = jnp.where(idx == root, pk, jnp.zeros_like(pk))
-
-        def step(buf, s):
-            # at step s, rank r forwards packet (s - r) if 0 <= s - r < m
-            p = s - vrank
-            ok = (p >= 0) & (p < m) & (vrank < n - 1)
-            safe = jnp.clip(p, 0, m - 1)
-            val = jnp.where(ok, buf[safe], jnp.zeros((plen,), buf.dtype))
-            rec = jax.lax.ppermute(val, axis, pairs)
-            pr = s - vrank + 1
-            rok = (pr >= 0) & (pr < m) & (vrank >= 1)
-            rsafe = jnp.clip(pr, 0, m - 1)
-            cur = buf[rsafe]
-            buf = buf.at[rsafe].set(jnp.where(rok, rec, cur))
-            return buf, ()
-
-        buf, _ = jax.lax.scan(step, buf, jnp.arange(m + n - 2))
-        return buf[None]
-
-    out = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(axis),
-                        check_vma=False)(packets)
-    return out.reshape(n, m * plen)[:, :x.size].reshape((n,) + x.shape)
+def chain_broadcast(*args, **kwargs):
+    _warn_moved("chain_broadcast")
+    return _chain_broadcast(*args, **kwargs)

@@ -10,8 +10,11 @@ the event simulator.
   * glf           — Global-Links-First (Dorier et al. 2016 / Xiang-Liu 2015):
                     coarse-to-fine hierarchical broadcast; BFS virtual ranks +
                     binomial on flat topologies.
-  * bine          — binomial negabinary tree (De Sensi et al. SC'25): binomial
-                    pattern over distance-halving +/-2^s hops for locality.
+  * bine          — binomial pattern over sign-alternating +/-2^s hops (an
+                    approximation kept for backward compatibility).
+  * bine_tree     — genuine Bine negabinary tree (De Sensi et al., arxiv
+                    2508.17311): parent clears the most significant
+                    negabinary digit, hops are exactly (-2)^j.
   * mpi_bcast     — MPICH-style dispatcher: binomial below 512 KiB, SRDA above.
 
 All generators return SendTask lists (explicit deps; block ranges for partial
@@ -251,6 +254,56 @@ def bine_tasks(topo: Topology, root: int, nbytes: float) -> List[SendTask]:
     return _whole_message_tree(vsends, root, nbytes)
 
 
+def _negabinary_digits(r: int, k: int) -> List[int]:
+    """The unique d in {0,1}^k with r == sum d_i * (-2)^i  (mod 2^k).
+
+    The map d -> sum d_i (-2)^i mod 2^k is a bijection: (-2)^i has 2^i as
+    its lowest set bit, so the system is triangular mod 2 — digit i is
+    forced by bit i of the residue after the lower digits are subtracted."""
+    digits = []
+    x = r % (1 << k)
+    for i in range(k):
+        d = (x >> i) & 1
+        digits.append(d)
+        if d:
+            x = (x - (-2) ** i) % (1 << k)
+    return digits
+
+
+def bine_tree_tasks(topo: Topology, root: int,
+                    nbytes: float) -> List[SendTask]:
+    """Genuine Bine (binomial negabinary) broadcast tree (De Sensi et al.,
+    arxiv 2508.17311).
+
+    Every virtual rank r in [1, 2^k) has a unique negabinary digit vector
+    (:func:`_negabinary_digits`); its parent clears the most significant
+    digit, so the hop distance is exactly (-2)^j — strides alternate sign
+    with the digit position, which splits traffic between both ring
+    directions (classic binomial walks one way only) and halves the worst
+    hop distance on rings/tori with per-direction channels. Same send
+    count and depth as binomial: k steps, one new rank per holder per step.
+
+    Non-power-of-two n: the negabinary tree covers the largest 2^k <= n;
+    each remaining rank r in [n2, n) receives from r - n2 in one extra
+    step (the standard binomial-family remainder fold)."""
+    n = topo.num_nodes
+    n2 = 1 << (n.bit_length() - 1)      # largest power of two <= n
+    k = n2.bit_length() - 1
+    sends: List[Tuple[int, int, Tuple]] = []
+    for r in range(1, n2):
+        digits = _negabinary_digits(r, k)
+        j = max(i for i, d in enumerate(digits) if d)
+        parent = (r - (-2) ** j) % n2
+        sends.append((parent, r, (j + 1, parent)))
+    for r in range(n2, n):
+        sends.append((r - n2, r, (k + 1, r - n2)))
+    # parents always carry a strictly smaller most-significant digit, so
+    # level order is causal: a rank is delivered before it sends
+    sends.sort(key=lambda x: x[2])
+    vsends = [((root + u) % n, (root + v) % n, p) for (u, v, p) in sends]
+    return _whole_message_tree(vsends, root, nbytes)
+
+
 def mpi_bcast_tasks(topo: Topology, root: int, nbytes: float) -> List[SendTask]:
     """MPICH dispatch: binomial below 512 KiB, scatter-allgather above."""
     if nbytes < 512 * 1024:
@@ -282,6 +335,7 @@ BASELINES = {
     "srda": srda_tasks,
     "glf": glf_tasks,
     "bine": bine_tasks,
+    "bine_tree": bine_tree_tasks,
     "mpi_bcast": mpi_bcast_tasks,
 }
 

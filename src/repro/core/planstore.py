@@ -73,6 +73,7 @@ SCHEMA_VERSION = 5
 _MAGIC = "bbs-plan"
 _MAGIC_PACKED = "bbs-plan-pack"
 _MAGIC_BASELINE = "bbs-baseline-tasks"
+_MAGIC_CALIBRATION = "bbs-calibration"
 
 
 class StalePlanError(RuntimeError):
@@ -151,6 +152,42 @@ class BaselineKey:
     def filename(self) -> str:
         prefix = self.topo_name or "topo"
         return f"{prefix}-base-{self.algo}-r{self.root}-{self.mode}" \
+               f"-v{self.schema}-{self.digest()}.pkl"
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationKey:
+    """Content address of one measured-cost artifact
+    (``repro.device.calibrate.CalibratedCost``).
+
+    Calibration is a property of (fabric, execution environment), not of a
+    root or message size: ``backend`` (jax platform) and ``num_devices``
+    key the environment so an emulated-host fit is never mistaken for
+    silicon numbers. The payload is the artifact's own versioned dict
+    (``CalibratedCost.to_dict``), which external consumers
+    (benchmarks/roofline.py) also read as plain JSON."""
+
+    fingerprint: str
+    backend: str
+    num_devices: int
+    schema: int = SCHEMA_VERSION
+    topo_name: str = ""       # informational only; not part of the digest
+
+    @classmethod
+    def for_topology(cls, topo: Topology, backend: str,
+                     num_devices: int) -> "CalibrationKey":
+        return cls(fingerprint=topology_fingerprint(topo), backend=backend,
+                   num_devices=int(num_devices), topo_name=topo.name)
+
+    def digest(self) -> str:
+        h = hashlib.sha256()
+        h.update(repr((_MAGIC_CALIBRATION, self.schema, self.fingerprint,
+                       self.backend, self.num_devices)).encode())
+        return h.hexdigest()[:24]
+
+    def filename(self) -> str:
+        prefix = self.topo_name or "topo"
+        return f"{prefix}-cal-{self.backend}{self.num_devices}" \
                f"-v{self.schema}-{self.digest()}.pkl"
 
 
@@ -562,6 +599,12 @@ class PlanStore:
                                   nbytes=header["nbytes"],
                                   schema=header["schema"],
                                   topo_name=header.get("topo_name", ""))
+            elif magic == _MAGIC_CALIBRATION:
+                key = CalibrationKey(fingerprint=header["fingerprint"],
+                                     backend=header["backend"],
+                                     num_devices=header["num_devices"],
+                                     schema=header["schema"],
+                                     topo_name=header.get("topo_name", ""))
             else:
                 return None
         except KeyError:
@@ -683,6 +726,73 @@ class PlanStore:
         self.store_baseline(key, lowered, time.perf_counter() - t0)
         self._memo[memo_key] = lowered
         return lowered
+
+
+    # -- measured-cost calibration artifacts -----------------------------------
+
+    def path_for_calibration(self, key: CalibrationKey) -> str:
+        return os.path.join(self.root_dir, key.filename())
+
+    def store_calibration(self, key: CalibrationKey, cost) -> str:
+        """Persist a ``repro.device.calibrate.CalibratedCost`` under ``key``
+        (payload is its versioned plain dict — no code objects, so the
+        artifact outlives refactors of the dataclass)."""
+        blob = {
+            "magic": _MAGIC_CALIBRATION,
+            "header": {
+                "schema": key.schema,
+                "fingerprint": key.fingerprint,
+                "backend": key.backend,
+                "num_devices": key.num_devices,
+                "topo_name": key.topo_name,
+            },
+            "meta": {"created": time.time()},
+            "cost": cost.to_dict(),
+        }
+        payload = pickle.dumps(blob)
+        os.makedirs(self.root_dir, exist_ok=True)
+        path = self.path_for_calibration(key)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+        return path
+
+    def load_calibration(self, key: CalibrationKey):
+        """Load and validate the calibration artifact for ``key``; returns
+        (CalibratedCost, meta). Same validation rules as plan artifacts."""
+        from repro.device.calibrate import CalibratedCost
+        path = self.path_for_calibration(key)
+        if not os.path.exists(path):
+            raise FileNotFoundError(path)
+        try:
+            with open(path, "rb") as f:
+                blob = pickle.load(f)
+        except Exception as exc:
+            raise StalePlanError(
+                f"calibration artifact {path} is unreadable ({exc!r}); "
+                f"delete and re-measure") from exc
+        if not isinstance(blob, dict) or \
+                blob.get("magic") != _MAGIC_CALIBRATION:
+            raise StalePlanError(
+                f"{path} is not a calibration artifact — rebuild it through "
+                f"PlanStore.store_calibration")
+        header = blob["header"]
+        if header["schema"] != SCHEMA_VERSION:
+            raise StalePlanError(
+                f"{path}: engine schema version {header['schema']} != "
+                f"current {SCHEMA_VERSION}; re-measure after engine-schema "
+                f"changes")
+        for field in ("fingerprint", "backend", "num_devices"):
+            want = getattr(key, field)
+            got = header[field]
+            if got != want:
+                raise StalePlanError(
+                    f"{path}: {field} mismatch — artifact has {got!r}, "
+                    f"requested key has {want!r}; the stored calibration "
+                    f"belongs to a different fabric or environment")
+        return CalibratedCost.from_dict(blob["cost"]), \
+            dict(header, **blob.get("meta", {}))
 
 
 def _materialize(plan) -> None:

@@ -51,6 +51,49 @@ UNSET = _Unset()
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceConfig:
+    """Device-execution options (the ``SimConfig.device`` block).
+
+    ``mesh_shape`` is the jax device mesh shape (default: one flat axis over
+    ``topo.num_nodes`` devices — the only layout ``ExecutablePlan`` runs
+    today; multi-axis shapes must still multiply out to the node count).
+    ``dtype`` is the payload dtype the runner is compiled for; ``emulate``
+    documents that the mesh is host-emulated (``XLA_FLAGS=
+    --xla_force_host_platform_device_count=N`` before jax initializes) so
+    error messages and the calibration artifact can say so; ``use_pallas`` /
+    ``interpret`` gate the packed Pallas round step
+    (``repro.device.pallas_step``). Validated eagerly like every other
+    config block: a bad value raises here, not inside a jitted runner."""
+
+    mesh_shape: Optional[tuple] = None
+    axis: str = "dev"
+    dtype: str = "float32"
+    emulate: bool = False
+    use_pallas: bool = False
+    interpret: bool = False
+
+    _DTYPES = ("float32", "float16", "bfloat16", "int32", "uint32", "int8",
+               "uint8")
+
+    def __post_init__(self):
+        if self.dtype not in self._DTYPES:
+            raise ValueError(
+                f"DeviceConfig.dtype {self.dtype!r} not in {self._DTYPES}")
+        if self.mesh_shape is not None:
+            shape = tuple(self.mesh_shape)
+            if not shape or any((not isinstance(d, int)) or d <= 0
+                                for d in shape):
+                raise ValueError(
+                    f"DeviceConfig.mesh_shape must be a tuple of positive "
+                    f"ints, got {self.mesh_shape!r}")
+            object.__setattr__(self, "mesh_shape", shape)
+        if not self.axis or not isinstance(self.axis, str):
+            raise ValueError(
+                f"DeviceConfig.axis must be a non-empty string, "
+                f"got {self.axis!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class SimConfig:
     """Simulation options shared by every ``simulate_*`` entrypoint.
 
@@ -65,8 +108,10 @@ class SimConfig:
     verified occupancy-cycle analytics of the fast engine;
     ``max_sim_groups`` bounds the simulated pipeline prefix (Theorem-2
     extrapolation beyond it) and ``max_sim_segments`` is its task-list
-    analogue (``simulate_baseline``). Frozen: derive variants with
-    ``dataclasses.replace``.
+    analogue (``simulate_baseline``). ``device`` is the device-execution
+    block (``DeviceConfig``) consumed by ``repro.api`` ``executable()`` /
+    ``repro.device``; it does not affect simulation results. Frozen: derive
+    variants with ``dataclasses.replace``.
     """
 
     engine: str = DEFAULT_ENGINE
@@ -76,6 +121,14 @@ class SimConfig:
     cycle_hint: Optional["CycleInfo"] = None
     max_sim_groups: int = 6
     max_sim_segments: Optional[int] = None
+    device: Optional[DeviceConfig] = None
+
+    def __post_init__(self):
+        if self.device is not None and not isinstance(self.device,
+                                                      DeviceConfig):
+            raise TypeError(
+                f"SimConfig.device must be a DeviceConfig, "
+                f"got {type(self.device).__name__}")
 
 
 _legacy_warned = False

@@ -1,0 +1,84 @@
+"""Pallas-backed packed round step for the ppermute cycle loop.
+
+Between two collective-permutes every device does a scatter (write the row
+it just received) followed by a gather (read the row it sends next). The
+XLA rendering is a ``dynamic_update_index_in_dim`` + ``dynamic_index_in_dim``
+pair — two full passes over the packet buffer's touched rows plus the copy
+XLA inserts when the buffer cannot be donated mid-loop. The packed step
+fuses both into one kernel with the buffer aliased in place
+(``input_output_aliases``), one row written and one row read per call.
+
+Same contract as the jnp reference (`round_step_ref`): indexes are
+pre-clipped masks decide whether the write/read actually happens, so the
+two paths are bit-identical (asserted in tests/test_device.py with
+``interpret=True`` — Pallas TPU kernels cannot lower to CPU; on TPU flip
+``use_pallas``)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+try:  # pallas imports fine on CPU builds; kernels lower only on TPU/interpret
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    HAVE_PALLAS = True
+except Exception:                                    # pragma: no cover
+    pl = pltpu = None
+    HAVE_PALLAS = False
+
+
+def round_step_ref(buf, rec, r_idx, r_ok, s_idx, s_ok):
+    """Scatter the received row into ``buf``, then gather the next send row.
+
+    ``r_idx``/``s_idx`` must already be clipped to [0, buf.shape[0]);
+    ``r_ok``/``s_ok`` gate the write and zero the read respectively."""
+    cur = jax.lax.dynamic_index_in_dim(buf, r_idx, keepdims=False)
+    new = jnp.where(r_ok, rec, cur)
+    buf = jax.lax.dynamic_update_index_in_dim(buf, new, r_idx, 0)
+    val = jax.lax.dynamic_index_in_dim(buf, s_idx, keepdims=False)
+    val = jnp.where(s_ok, val, jnp.zeros_like(val))
+    return buf, val
+
+
+def _scatter_gather_kernel(scal_ref, buf_ref, rec_ref, out_ref, val_ref):
+    # scal = [r_idx, r_ok, s_idx, s_ok]; buf aliased to out (in-place row
+    # write). The gather reads *after* the scatter so an intra-cycle forward
+    # (send a row received one sub-round earlier) sees the fresh value.
+    r_idx = scal_ref[0]
+
+    @pl.when(scal_ref[1] != 0)
+    def _write():
+        out_ref[r_idx, :] = rec_ref[:]
+
+    v = out_ref[scal_ref[2], :]
+    val_ref[:] = jnp.where(scal_ref[3] != 0, v, jnp.zeros_like(v))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _round_step_pallas(buf, rec, scal, interpret=False):
+    return pl.pallas_call(
+        _scatter_gather_kernel,
+        out_shape=(jax.ShapeDtypeStruct(buf.shape, buf.dtype),
+                   jax.ShapeDtypeStruct(rec.shape, rec.dtype)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec(memory_space=pltpu.VMEM),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=(pl.BlockSpec(memory_space=pltpu.VMEM),
+                   pl.BlockSpec(memory_space=pltpu.VMEM)),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(scal, buf, rec)
+
+
+def round_step(buf, rec, r_idx, r_ok, s_idx, s_ok, *, use_pallas=False,
+               interpret=False):
+    """The packed scatter+gather step: jnp oracle by default, the Pallas
+    kernel when ``use_pallas`` (TPU, or ``interpret=True`` for tests)."""
+    if not (use_pallas and HAVE_PALLAS):
+        return round_step_ref(buf, rec, r_idx, r_ok, s_idx, s_ok)
+    scal = jnp.stack([jnp.int32(r_idx), jnp.int32(r_ok),
+                      jnp.int32(s_idx), jnp.int32(s_ok)])
+    return _round_step_pallas(buf, rec, scal, interpret=interpret)

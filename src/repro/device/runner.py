@@ -1,0 +1,202 @@
+"""Execute device schedules as ``lax.ppermute`` programs under shard_map.
+
+The cycle loop is a ``lax.scan`` (compile size independent of message size);
+the d sub-rounds within a cycle are unrolled (d is small: 1-8 for the BBS
+families). Each sub-round is a matching => exactly one XLA
+``collective-permute``; between permutes every device runs the packed
+scatter+gather step (``repro.device.pallas_step``). This is the TPU-native
+rendering of the paper's algorithm: every ICI link carries a packet every
+round — balanced saturation.
+
+``device_mesh`` builds the execution mesh from whatever devices the process
+has; emulated runs get 8 host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` **set before jax
+initializes** (the device count cannot change afterwards — tests spawn a
+subprocess, see tests/test_device.py and docs/device.md).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.device.pallas_step import round_step
+from repro.device.schedule import _NOSEND, DeviceSchedule
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: the experimental module spells the
+    replication-check flag ``check_rep``; newer releases promote it to
+    ``jax.shard_map`` with ``check_vma``. ppermute outputs are intentionally
+    device-varying, so the check is off either way."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def device_mesh(num_devices: int, axis: str = "dev") -> Mesh:
+    """A 1-D mesh over the first ``num_devices`` process devices."""
+    devs = jax.devices()
+    if len(devs) < num_devices:
+        raise RuntimeError(
+            f"need {num_devices} devices, process has {len(devs)}; for an "
+            f"emulated host mesh set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_devices} before "
+            f"jax initializes (e.g. in a subprocess)")
+    return Mesh(np.array(devs[:num_devices]), (axis,))
+
+
+def _pad_packets(x: jax.Array, num_packets: int) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    plen = -(-flat.size // num_packets)
+    pad = plen * num_packets - flat.size
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(num_packets, plen), plen
+
+
+def bbs_broadcast(x: jax.Array, mesh: Mesh, axis: str, sched: DeviceSchedule,
+                  num_groups: int, *, use_pallas: bool = False,
+                  interpret: bool = False) -> jax.Array:
+    """Broadcast `x` from the schedule's root device to every device along
+    `axis`. Returns the per-device copies stacked on a leading axis (callers
+    that need the replicated value take [i] on their own shard).
+
+    The input is only read on the root device; other devices' values are
+    ignored (zeroed before the pipeline runs). Relay rows (multi-hop plan
+    edges) live after the ``m*K`` packet rows and are dropped on return.
+    """
+    n = mesh.shape[axis]
+    assert n == sched.num_devices
+    m = num_groups
+    K = sched.K
+    packets, plen = _pad_packets(x, m * K)
+    total = m * K
+    if sched.num_relay:
+        packets = jnp.concatenate(
+            [packets, jnp.zeros((sched.num_relay, plen), packets.dtype)])
+    rows = total + sched.num_relay
+    send_rel = jnp.asarray(sched.send_rel)
+    recv_rel = jnp.asarray(sched.recv_rel)
+    send_abs = jnp.asarray(sched.send_abs)
+    recv_abs = jnp.asarray(sched.recv_abs)
+    perms = sched.perms
+    num_cycles = sched.num_cycles(m)
+
+    def body(buf_x):
+        idx = jax.lax.axis_index(axis)
+        buf = jnp.where(idx == sched.root, buf_x, jnp.zeros_like(buf_x))
+
+        def slot(r, c):
+            """(send_idx, send_ok, recv_idx, recv_ok) for sub-round r."""
+            s_rel, s_abs = send_rel[r, idx], send_abs[r, idx]
+            r_rel, r_abs = recv_rel[r, idx], recv_abs[r, idx]
+            s_pk, r_pk = c * K + s_rel, c * K + r_rel
+            s_ok = (s_abs >= 0) | ((s_rel != _NOSEND)
+                                   & (s_pk >= 0) & (s_pk < total))
+            r_ok = (r_abs >= 0) | ((r_rel != _NOSEND)
+                                   & (r_pk >= 0) & (r_pk < total))
+            s_ix = jnp.where(s_abs >= 0, total + s_abs,
+                             jnp.clip(s_pk, 0, total - 1))
+            r_ix = jnp.where(r_abs >= 0, total + r_abs,
+                             jnp.clip(r_pk, 0, total - 1))
+            return s_ix, s_ok, r_ix, r_ok
+
+        def cycle(buf, c):
+            s_ix, s_ok, _, _ = slot(0, c)
+            zero = jnp.zeros((plen,), buf.dtype)
+            buf, val = round_step(buf, zero, 0, False, s_ix, s_ok,
+                                  use_pallas=use_pallas, interpret=interpret)
+            for r in range(sched.d):
+                rec = jax.lax.ppermute(val, axis, perms[r])
+                _, _, r_ix, r_ok = slot(r, c)
+                if r + 1 < sched.d:
+                    ns_ix, ns_ok, _, _ = slot(r + 1, c)
+                else:
+                    ns_ix, ns_ok = 0, jnp.bool_(False)
+                buf, val = round_step(buf, rec, r_ix, r_ok, ns_ix, ns_ok,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)
+            return buf, ()
+
+        buf, _ = jax.lax.scan(cycle, buf, jnp.arange(num_cycles))
+        return buf[None]   # leading device axis chunk of size 1
+
+    out = shard_map_compat(body, mesh, P(), P(axis))(packets)
+    return out[:, :total].reshape(n, total * plen)[:, :x.size] \
+        .reshape((n,) + x.shape)
+
+
+def binomial_broadcast(x: jax.Array, mesh: Mesh, axis: str,
+                       root: int = 0) -> jax.Array:
+    """Whole-message binomial-tree broadcast: log2(n) ppermute rounds.
+    The baseline the paper compares against; same stacked-output convention."""
+    n = mesh.shape[axis]
+    steps = max(1, (n - 1).bit_length())
+
+    def body(xx):
+        idx = jax.lax.axis_index(axis)
+        vrank = (idx - root) % n
+        buf = jnp.where(idx == root, xx, jnp.zeros_like(xx))
+        have = (vrank == 0)
+        for s in reversed(range(steps)):
+            stride = 1 << s
+            pairs = []
+            for r in range(0, n, 2 * stride):
+                if r + stride < n:
+                    pairs.append((int((root + r) % n),
+                                  int((root + r + stride) % n)))
+            rec = jax.lax.ppermute(jnp.where(have, buf, jnp.zeros_like(buf)),
+                                   axis, pairs)
+            is_dst = (vrank % (2 * stride) == stride)
+            buf = jnp.where(is_dst, rec, buf)
+            have = have | is_dst
+        return buf[None]
+
+    return shard_map_compat(body, mesh, P(), P(axis))(x)
+
+
+def chain_broadcast(x: jax.Array, mesh: Mesh, axis: str, root: int = 0,
+                    num_packets: int = 8) -> jax.Array:
+    """Pipelined ring/chain broadcast: packets stream rank->rank+1 (the
+    MPICH 'pipeline' baseline), m + n - 2 ppermute rounds."""
+    n = mesh.shape[axis]
+    m = num_packets
+    packets, plen = _pad_packets(x, m)
+    pairs = [(int((root + i) % n), int((root + i + 1) % n))
+             for i in range(n - 1)]
+
+    def body(pk):
+        idx = jax.lax.axis_index(axis)
+        vrank = (idx - root) % n
+        buf = jnp.where(idx == root, pk, jnp.zeros_like(pk))
+
+        def step(buf, s):
+            # at step s, rank r forwards packet (s - r) if 0 <= s - r < m
+            p = s - vrank
+            ok = (p >= 0) & (p < m) & (vrank < n - 1)
+            safe = jnp.clip(p, 0, m - 1)
+            val = jnp.where(ok, buf[safe], jnp.zeros((plen,), buf.dtype))
+            rec = jax.lax.ppermute(val, axis, pairs)
+            pr = s - vrank + 1
+            rok = (pr >= 0) & (pr < m) & (vrank >= 1)
+            rsafe = jnp.clip(pr, 0, m - 1)
+            cur = buf[rsafe]
+            buf = buf.at[rsafe].set(jnp.where(rok, rec, cur))
+            return buf, ()
+
+        buf, _ = jax.lax.scan(step, buf, jnp.arange(m + n - 2))
+        return buf[None]
+
+    out = shard_map_compat(body, mesh, P(), P(axis))(packets)
+    return out.reshape(n, m * plen)[:, :x.size].reshape((n,) + x.shape)

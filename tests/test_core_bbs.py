@@ -178,7 +178,8 @@ def test_bbs_beats_baselines_large(mesh, mesh_cm, mesh_plan):
     """The paper's headline: BBS wins at large message sizes."""
     M = 16e6
     t_bbs, _ = broadcast_time(mesh_plan, M)
-    for name in ("binomial", "pipeline", "srda", "glf", "bine", "mpi_bcast"):
+    for name in ("binomial", "pipeline", "srda", "glf", "bine", "bine_tree",
+                 "mpi_bcast"):
         t_base = simulate_baseline(mesh, mesh_cm, name, 0, M).finish_time
         assert t_bbs <= t_base * 1.001, f"BBS lost to {name}"
 

@@ -1,0 +1,361 @@
+"""Device-execution tests: schedules, runners, calibration, the executable
+API and the collectives deprecation shim.
+
+Schedule compilation, symmetry round-trips and the calibration artifact
+plumbing run in-process (single CPU device). Anything that actually runs a
+broadcast on a mesh spawns a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main pytest
+process must keep a single device — same discipline as
+tests/test_collectives.py).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_multidevice(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    return proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Schedule compilation (in-process)
+# ---------------------------------------------------------------------------
+
+def _schedules_equal_under(perm, s0, s1):
+    """s1 must be s0 with the device axis relabeled by ``perm``."""
+    assert (s1.K, s1.d, s1.max_arrival, s1.num_relay) == \
+        (s0.K, s0.d, s0.max_arrival, s0.num_relay)
+    for r in range(s0.d):
+        assert {(perm[a], perm[b]) for a, b in s0.perms[r]} == \
+            set(s1.perms[r]), f"round {r} matching differs"
+    for t0, t1 in ((s0.send_rel, s1.send_rel), (s0.recv_rel, s1.recv_rel),
+                   (s0.send_abs, s1.send_abs), (s0.recv_abs, s1.recv_abs)):
+        for r in range(s0.d):
+            for v in range(s0.num_devices):
+                assert t0[r][v] == t1[r][perm[v]], \
+                    f"table mismatch at round {r}, device {v}"
+
+
+@pytest.mark.parametrize("mk", ["ring", "hypercube", "mesh2d"])
+def test_schedule_symmetry_roundtrip(mk):
+    """Relabeled plan -> device schedule == permuted representative
+    schedule, for every candidate — including candidates with pinned route
+    overrides and relay chains (the PR 7 orbit-sharing contract extended to
+    the device tables)."""
+    from repro.core import topology as T
+    from repro.core.bbs import build_plan
+    from repro.core.intersection import ConflictModel
+    from repro.core.symmetry import relabel_plan
+    from repro.device import NotDeviceExecutable, make_device_schedule
+
+    topo = {"ring": lambda: T.ring(8),
+            "hypercube": lambda: T.hypercube(3),
+            "mesh2d": lambda: T.mesh2d(3, 3)}[mk]()
+    n = topo.num_nodes
+    orbits = topo.automorphisms().orbits()
+    rep, w = orbits.rep_of[n - 1], orbits.witness(n - 1)
+    assert w[rep] == n - 1
+    plan = build_plan(topo, root=rep)
+    rplan = relabel_plan(plan, w)
+    compiled = ConflictModel(topo).compiled()
+    seen_override = seen_relay = False
+    for c, rc in zip(plan.candidates, rplan.candidates):
+        try:
+            s0 = make_device_schedule(c.pipeline, n, compiled=compiled)
+        except NotDeviceExecutable:
+            with pytest.raises(NotDeviceExecutable):
+                make_device_schedule(rc.pipeline, n, compiled=compiled)
+            continue
+        s1 = make_device_schedule(rc.pipeline, n, compiled=compiled)
+        _schedules_equal_under(w, s0, s1)
+        seen_override |= rc.pipeline.routes is not None
+        seen_relay |= s0.num_relay > 0
+    # the round-trip must have exercised the interesting machinery, not
+    # just identity tables
+    assert seen_relay, "no candidate produced relay chains"
+    if mk in ("ring", "mesh2d"):
+        assert seen_override, "no relabeled candidate carried route overrides"
+
+
+def test_baseline_trees_compile_to_schedules():
+    """Whole-message baseline trees lower through build_pipeline into
+    device schedules; multi-hop strides become relay chains."""
+    from repro.core import topology as T
+    from repro.core.intersection import ConflictModel
+    from repro.device import build_executable
+
+    topo = T.ring(8)
+    cm = ConflictModel(topo)
+    for algo in ("binomial", "bine_tree"):
+        ex = build_executable(topo, cm, 0, 4096.0, algo=algo)
+        assert ex.schedule.num_devices == 8
+        assert ex.predicted_time > 0
+        assert ex.num_groups == 1
+    # binomial on a ring needs stride-2/4 relay hops
+    ex = build_executable(topo, cm, 0, 4096.0, algo="binomial")
+    assert ex.schedule.num_relay > 0
+
+
+def test_non_tree_baseline_rejected():
+    from repro.core import topology as T
+    from repro.core.intersection import ConflictModel
+    from repro.device import NotDeviceExecutable, build_executable
+
+    topo = T.ring(8)
+    cm = ConflictModel(topo)
+    with pytest.raises(NotDeviceExecutable):
+        build_executable(topo, cm, 0, 4e6, algo="srda")   # block exchanges
+
+
+# ---------------------------------------------------------------------------
+# Pallas round step (in-process; interpret mode runs on CPU)
+# ---------------------------------------------------------------------------
+
+def test_pallas_round_step_matches_oracle():
+    import jax.numpy as jnp
+    from repro.device.pallas_step import HAVE_PALLAS, round_step
+
+    if not HAVE_PALLAS:
+        pytest.skip("pallas unavailable")
+    rng = np.random.RandomState(0)
+    buf = jnp.asarray(rng.rand(6, 16).astype(np.float32))
+    rec = jnp.asarray(rng.rand(16).astype(np.float32))
+    for (r_idx, r_ok, s_idx, s_ok) in [(2, True, 4, True), (0, False, 5, True),
+                                       (3, True, 0, False),
+                                       (1, False, 2, False)]:
+        b0, v0 = round_step(buf, rec, r_idx, r_ok, s_idx, s_ok,
+                            use_pallas=False)
+        b1, v1 = round_step(buf, rec, r_idx, r_ok, s_idx, s_ok,
+                            use_pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(b0), np.asarray(b1))
+        np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+
+
+# ---------------------------------------------------------------------------
+# Config + shim (in-process)
+# ---------------------------------------------------------------------------
+
+def test_device_config_validation():
+    from repro.core.simconfig import DeviceConfig, SimConfig
+
+    cfg = DeviceConfig(mesh_shape=[2, 4])
+    assert cfg.mesh_shape == (2, 4)          # normalized to a tuple
+    with pytest.raises(ValueError):
+        DeviceConfig(dtype="float64")
+    with pytest.raises(ValueError):
+        DeviceConfig(mesh_shape=(0, 8))
+    with pytest.raises(ValueError):
+        DeviceConfig(axis="")
+    with pytest.raises(TypeError):
+        SimConfig(device={"axis": "dev"})
+    sc = SimConfig(device=DeviceConfig())
+    assert sc.device.axis == "dev"
+
+
+def test_collectives_shim_warns_once_and_forwards():
+    from repro.collectives import bbs_collective as shim
+    from repro.core import topology as T
+    from repro.core.bbs import build_plan
+    from repro import device
+
+    plan = build_plan(T.ring(8), root=0)
+    shim.reset_moved_warning()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        s0 = shim.make_device_schedule(plan.candidates[0].pipeline, 8)
+        s1 = shim.make_device_schedule(plan.candidates[0].pipeline, 8)
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1, "shim must warn exactly once per process"
+    assert "repro.device" in str(deps[0].message)
+    # forwards to the real implementation
+    ref = device.make_device_schedule(plan.candidates[0].pipeline, 8)
+    assert s0.perms == ref.perms and s1.perms == ref.perms
+    assert isinstance(s0, device.DeviceSchedule)
+
+
+# ---------------------------------------------------------------------------
+# Calibration artifacts (in-process)
+# ---------------------------------------------------------------------------
+
+def test_fit_hockney_recovers_known_constants():
+    from repro.device.calibrate import _fit_hockney
+
+    alpha, beta = 2e-5, 40e9
+    sizes = [1 << 10, 8 << 10, 64 << 10, 1 << 20]
+    times = [alpha + s / beta for s in sizes]
+    a, b, resid = _fit_hockney(sizes, times)
+    assert abs(a - alpha) / alpha < 1e-6
+    assert abs(b - beta) / beta < 1e-6
+    assert resid < 1e-12
+
+
+def test_calibrated_cost_json_roundtrip(tmp_path):
+    from repro.device.calibrate import CalibratedCost
+
+    cost = CalibratedCost(classes={"tpu_ici": (1.5e-5, 45e9)},
+                          meta={"backend": "cpu", "emulated": True})
+    path = cost.save(str(tmp_path / "calibration.json"))
+    c2 = CalibratedCost.load(path)
+    assert c2.classes == cost.classes and c2.meta == cost.meta
+    assert c2.round_time("tpu_ici", 45e9) == pytest.approx(1.0 + 1.5e-5)
+    with pytest.raises(ValueError):
+        CalibratedCost.from_dict({"magic": "something-else", "classes": {}})
+
+
+def test_apply_calibration_changes_fingerprint():
+    from repro.core import topology as T
+    from repro.core.routing import topology_fingerprint
+    from repro.device import CalibratedCost, apply_calibration
+
+    topo = T.ring(8)
+    cost = CalibratedCost(classes={"tpu_ici": (1e-5, 5e10)})
+    t2 = apply_calibration(topo, cost)
+    assert topology_fingerprint(t2) != topology_fingerprint(topo)
+    assert t2.latency((0, 1)) == pytest.approx(1e-5)
+    # plans build cleanly against the calibrated fabric
+    from repro.core.bbs import build_plan
+    assert build_plan(t2, root=0).candidates
+
+
+def test_planstore_calibration_roundtrip(tmp_path):
+    from repro.core import topology as T
+    from repro.core.planstore import (CalibrationKey, PlanStore,
+                                      StalePlanError)
+    from repro.device import CalibratedCost
+
+    topo = T.ring(8)
+    store = PlanStore(str(tmp_path))
+    key = CalibrationKey.for_topology(topo, "cpu", 8)
+    cost = CalibratedCost(classes={"tpu_ici": (1e-5, 5e10)},
+                          meta={"backend": "cpu"})
+    path = store.store_calibration(key, cost)
+    c2, meta = store.load_calibration(key)
+    assert c2.classes == cost.classes
+    assert meta["backend"] == "cpu" and meta["num_devices"] == 8
+    # prune recognizes the artifact as canonical
+    assert store.prune() == []
+    assert os.path.exists(path)
+    # a different environment is a different artifact
+    with pytest.raises(FileNotFoundError):
+        store.load_calibration(CalibrationKey.for_topology(topo, "tpu", 8))
+    # a corrupted artifact raises StalePlanError (and prune removes it)
+    with open(path, "wb") as f:
+        f.write(b"garbage")
+    with pytest.raises(StalePlanError):
+        store.load_calibration(key)
+    assert store.prune() == [path]
+
+
+def test_roofline_consumes_calibration(tmp_path):
+    sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    try:
+        import roofline
+    finally:
+        sys.path.pop(0)
+    from repro.device import CalibratedCost
+
+    assert roofline.load_calibration(str(tmp_path / "missing.json")) is None
+    assert roofline.link_bandwidth(None) == roofline.LINK_BW
+    cost = CalibratedCost(classes={"tpu_ici": (1e-5, 45e9)})
+    p = cost.save(str(tmp_path / "calibration.json"))
+    c = roofline.load_calibration(p)
+    assert roofline.link_bandwidth(c) == pytest.approx(45e9)
+    # all-port collective term: 2D torus has 4 concurrent links per chip
+    assert roofline.links_per_chip("pod16x16") == 4
+    rec = {"chips": 256, "mesh": "pod16x16", "flops": 1e12,
+           "dot_bytes": 1e9, "collective_bytes": {"all-reduce": 4e8},
+           "memory": {"peak_bytes": 1 << 30},
+           "arch": "llama3.2-3b", "shape": "train_4k"}
+    row = roofline.roofline_row(rec, c)
+    assert row["t_collective"] == pytest.approx(4e8 / (45e9 * 4))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end on the emulated 8-device mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_executable_end_to_end_bit_exact():
+    """Acceptance: BBS and Bine plans deliver bit-identically on two
+    fabrics x two message sizes through api.compile(...).executable(...)."""
+    run_multidevice("""
+        import numpy as np, jax.numpy as jnp
+        from repro import api
+        from repro.core import topology as T
+        for mk in (lambda: T.ring(8), lambda: T.hypercube(3)):
+            topo = mk()
+            model = api.compile(topo)
+            for nbytes in (1 << 12, 1 << 16):
+                x = jnp.asarray(np.random.RandomState(7)
+                                .rand(nbytes // 4).astype(np.float32))
+                for algo in ("bbs", "bine_tree"):
+                    ex = model.executable(root=0, nbytes=nbytes, algo=algo)
+                    chk = ex.verify(x)
+                    assert chk.ok, (topo.name, nbytes, algo, chk.missing)
+    """)
+
+
+@pytest.mark.slow
+def test_executable_nonzero_root_and_pallas():
+    """Relabeled (PlanServer) plans execute correctly from non-canonical
+    roots, and the pallas interpret round step is bit-identical."""
+    run_multidevice("""
+        import numpy as np, jax.numpy as jnp
+        from repro import api
+        from repro.core import topology as T
+        from repro.core.simconfig import DeviceConfig, SimConfig
+        model = api.compile(T.ring(8), server=True)
+        x = jnp.asarray(np.random.RandomState(3)
+                        .rand(2048).astype(np.float32))
+        for root in (0, 3, 5):
+            ex = model.executable(root=root, nbytes=8192)
+            assert ex.verify(x).ok, root
+        cfg = SimConfig(device=DeviceConfig(use_pallas=True, interpret=True))
+        ex = model.executable(root=2, nbytes=8192, config=cfg)
+        assert ex.device.use_pallas
+        assert ex.verify(x).ok
+    """)
+
+
+@pytest.mark.slow
+def test_calibration_prediction_error_bound():
+    """Fitted Hockney constants predict the measured cycle time within the
+    35% subprocess tolerance (the committed bench floor holds the tighter
+    15% bound on the quiet CI runner profile)."""
+    out = run_multidevice("""
+        import warnings
+        warnings.filterwarnings('ignore', message='.*donated.*')
+        from repro import api
+        from repro.core import topology as T
+        from repro.device import calibrate, prediction_report
+        topo = T.ring(8)
+        model = api.compile(topo)
+        ex = model.executable(root=0, nbytes=1 << 16)
+        mesh = ex.mesh()
+        cost = calibrate(topo, mesh, sizes=(1 << 10, 8 << 10, 64 << 10),
+                         iters=16, reps=3)
+        assert cost.meta['emulated'] and cost.meta['backend'] == 'cpu'
+        a, b = cost.classes[next(iter(cost.classes))]
+        assert a >= 0 and b > 0
+        rows = prediction_report([ex], cost, mesh=mesh, reps=3)
+        print('PRED_ERR', rows[0].rel_err)
+    """)
+    err = float(out.split("PRED_ERR")[1].split()[0])
+    assert err <= 0.35, f"prediction error {err:.1%} out of bounds"

@@ -202,7 +202,8 @@ def test_baseline_engines_identical(name):
 @pytest.mark.parametrize("mode", [FULL_DUPLEX, ALL_PORT])
 @pytest.mark.parametrize("name", ["mesh2d", "dragonfly", "fattree",
                                   "butterfly"])
-@pytest.mark.parametrize("algo", ["srda", "glf", "bine", "pipeline"])
+@pytest.mark.parametrize("algo", ["srda", "glf", "bine", "bine_tree",
+                                  "pipeline"])
 def test_baseline_lowered_matrix(algo, name, mode, topos):
     """The lowered task-list path (memoized ``CompiledTaskList``, folded
     segment execution for the chain family, countdown block coverage) is

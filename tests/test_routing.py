@@ -227,18 +227,26 @@ def test_device_schedule_from_flat_template():
             assert rel == k - K * arr[(k, v)]
 
 
-def test_device_schedule_rejects_multihop_edges():
-    from repro.collectives.bbs_collective import make_device_schedule
+def test_device_schedule_lowers_multihop_edges_to_relays():
+    from repro.device import make_device_schedule
 
     topo = T.ring(16)
     cm = ConflictModel(topo, FULL_DUPLEX)
-    # a binomial tree on a ring uses power-of-2 strides: multi-hop edges
+    # a binomial tree on a ring uses power-of-2 strides: multi-hop edges.
+    # The compiled fabric routes them into relay chains of single-hop
+    # matchings (extra absolute-indexed buffer rows) instead of rejecting
+    # the pipeline — see repro.device.schedule
     pipe = build_pipeline(topo, [arb.binomial_arborescence(topo, 0)], cm)
-    with pytest.raises(AssertionError, match="not a physical link"):
-        make_device_schedule(pipe, 16, compiled=cm.compiled())
-    # without the compiled fabric the lowering stays permissive (virtual
-    # topologies / tests drive it with logical pipelines)
-    make_device_schedule(pipe, 16)
+    sched = make_device_schedule(pipe, 16, compiled=cm.compiled())
+    assert sched.num_relay > 0
+    # every matching pair must be a physical ring link
+    for rnd in sched.perms:
+        for (a, b) in rnd:
+            assert (b - a) % 16 in (1, 15), f"({a},{b}) not a ring link"
+    # without the compiled fabric the lowering stays permissive: edges are
+    # taken as logical single hops (virtual topologies / tests drive it
+    # with logical pipelines) and no relays are needed
+    assert make_device_schedule(pipe, 16).num_relay == 0
 
 
 # -- CompiledTaskList: the one-shot task-list lowering ------------------------
